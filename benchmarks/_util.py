@@ -1,0 +1,37 @@
+"""Benchmark helpers. Multi-device benchmarks run in subprocesses so the
+main process keeps the default single CPU device (repo policy: the forced
+device count is dry-run / subprocess-local only)."""
+import os
+import pathlib
+import subprocess
+import sys
+import time
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+SRC = ROOT / "src"
+
+
+def run_py(src: str, devices: int = 8, timeout: int = 900) -> str:
+    env = os.environ.copy()
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = str(SRC)
+    r = subprocess.run([sys.executable, "-c", src], capture_output=True,
+                       text=True, env=env, timeout=timeout)
+    if r.returncode != 0:
+        raise RuntimeError(f"bench subprocess failed:\n{r.stdout}\n{r.stderr}")
+    return r.stdout
+
+
+def timeit(fn, *args, warmup: int = 2, iters: int = 10) -> float:
+    """-> microseconds per call (blocked on result)."""
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def emit(name: str, us: float, derived: str = "") -> None:
+    print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,71 @@
+"""Ablations (paper §IV-A: the threshold sweep 0.005/0.01/0.05/0.1, plus
+wire-budget ratio and selector-count sweeps). LM smoke scale, 8-node ring;
+reports final CE, achieved importance density, and wire compression."""
+from __future__ import annotations
+
+from benchmarks._util import emit, run_py
+
+_SCRIPT = r"""
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_arch
+from repro.configs.base import InputShape
+from repro.launch.mesh import make_sim_mesh
+from repro.launch.train import build_train
+from repro.data.synthetic import lm_batch
+
+mesh = make_sim_mesh(dp=8, tp=1)
+shape = InputShape("abl", 64, 16, "train")
+base = get_arch("qwen1.5-0.5b").reduced()
+
+def run(cfg, strategy="iwp_ring", steps=30):
+    tb = build_train(cfg, mesh, shape, sync_strategy=strategy,
+                     param_dtype=jnp.float32, compute_dtype=jnp.float32,
+                     base_lr=0.05, warmup_steps=5, total_steps=40)
+    dens = []
+    with jax.set_mesh(mesh):
+        state = tb.init_fn(jax.random.PRNGKey(0))
+        for i in range(steps):
+            b = lm_batch(jax.random.PRNGKey(300 + i), 16, 64,
+                         cfg.vocab_size)
+            mb = tb.microbatches
+            b = jax.tree.map(lambda x: x.reshape(
+                (mb, x.shape[0] // mb) + x.shape[1:]), b)
+            state, m = tb.step_fn(state, b, jax.random.PRNGKey(i))
+            dens.append(float(m.get("sync/achieved_density", 1.0)))
+    return float(m["ce_loss"]), float(np.mean(dens[-10:]))
+
+loss_d, _ = run(base, strategy="dense_ring")
+print(f"ABL,dense,loss={loss_d:.4f}")
+
+# paper's threshold sweep (fixed threshold)
+for thr in (0.005, 0.01, 0.05, 0.1):
+    cfg = dataclasses.replace(base, iwp_threshold=thr, iwp_layerwise=False)
+    loss, dens = run(cfg)
+    print(f"ABL,thr_{thr},loss={loss:.4f},achieved_density={dens:.4f}")
+
+# wire-budget ratio sweep
+for ratio in (1/4, 1/16, 1/64):
+    cfg = dataclasses.replace(base, iwp_ratio=ratio)
+    loss, dens = run(cfg)
+    print(f"ABL,ratio_1/{int(1/ratio)},loss={loss:.4f},"
+          f"achieved_density={dens:.4f}")
+
+# selector-count sweep (mask agreement nodes r)
+for r in (1, 2, 4):
+    cfg = dataclasses.replace(base, iwp_selectors=r)
+    loss, dens = run(cfg)
+    print(f"ABL,selectors_{r},loss={loss:.4f}")
+"""
+
+
+def main() -> None:
+    out = run_py(_SCRIPT, devices=8, timeout=2400)
+    for line in out.splitlines():
+        if line.startswith("ABL,"):
+            _, name, rest = line.split(",", 2)
+            emit(f"ablation/{name}", 0.0, rest)
+
+
+if __name__ == "__main__":
+    main()

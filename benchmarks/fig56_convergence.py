@@ -1,0 +1,57 @@
+"""Paper Figs 5-6: convergence (loss/accuracy) parity of IWP vs baseline,
+LM smoke scale on an 8-node ring. Reports final losses and the parity gap."""
+from __future__ import annotations
+
+from benchmarks._util import emit, run_py
+
+_SCRIPT = r"""
+import jax, jax.numpy as jnp
+from repro.configs import get_arch
+from repro.configs.base import InputShape
+from repro.launch.mesh import make_sim_mesh
+from repro.launch.train import build_train
+from repro.data.synthetic import lm_batch
+
+mesh = make_sim_mesh(dp=8, tp=1)
+shape = InputShape("bench", 64, 16, "train")
+cfg = get_arch("qwen1.5-0.5b").reduced()
+
+def run(strategy, steps=60):
+    tb = build_train(cfg, mesh, shape, sync_strategy=strategy,
+                     param_dtype=jnp.float32, compute_dtype=jnp.float32,
+                     base_lr=0.05, warmup_steps=10)
+    losses = []
+    with jax.set_mesh(mesh):
+        state = tb.init_fn(jax.random.PRNGKey(0))
+        for i in range(steps):
+            b = lm_batch(jax.random.PRNGKey(900 + i), 16, 64, cfg.vocab_size)
+            mbn = tb.microbatches
+            b = jax.tree.map(lambda x: x.reshape(
+                (mbn, x.shape[0] // mbn) + x.shape[1:]), b)
+            state, m = tb.step_fn(state, b, jax.random.PRNGKey(i))
+            losses.append(float(m["ce_loss"]))
+    return losses
+
+base = run("dense_ring")
+iwp = run("iwp_ring")
+dgc = run("dgc_ring")
+import numpy as np
+print(f"CURVE,baseline," + ";".join(f"{x:.4f}" for x in base[::6]))
+print(f"CURVE,iwp," + ";".join(f"{x:.4f}" for x in iwp[::6]))
+print(f"CURVE,dgc," + ";".join(f"{x:.4f}" for x in dgc[::6]))
+print(f"FINAL,baseline,{np.mean(base[-5:]):.4f}")
+print(f"FINAL,iwp,{np.mean(iwp[-5:]):.4f}")
+print(f"FINAL,dgc,{np.mean(dgc[-5:]):.4f}")
+"""
+
+
+def main() -> None:
+    out = run_py(_SCRIPT, devices=8)
+    for line in out.splitlines():
+        if line.startswith(("CURVE,", "FINAL,")):
+            kind, name, rest = line.split(",", 2)
+            emit(f"fig56/{kind.lower()}_{name}", 0.0, rest)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Paper Figs 7-8 + the §II densification claim: per-device bytes-on-wire
+per step vs node count for dense ring / DGC (per-node top-k, densifying) /
+IWP (shared mask, constant). Analytic model (metrics.py) + a measured
+8-node simulation of DGC's union densities."""
+from __future__ import annotations
+
+from benchmarks._util import emit, run_py
+
+_SIM = r"""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.core import dgc
+from repro.core.dgc import DGCConfig
+from repro.core.flatten import make_flat_spec
+mesh = jax.make_mesh((8,), ("data",))
+params = {"a": np.zeros((512, 256), np.float32)}
+spec = make_flat_spec(params, 256)
+g = np.random.default_rng(0).normal(size=(8, spec.n_blocks, 256)).astype(np.float32)
+cfg = DGCConfig(block=256, ratio=1/64, momentum=0.0)
+def f(gg, acc):
+    _, _, stats = dgc.compress_and_reduce(acc, gg, cfg, spec, ("data",))
+    return stats["hop_densities"]
+sm = jax.shard_map(f, mesh=mesh, in_specs=(P("data"), P()), out_specs=P(),
+                   check_vma=False)
+with jax.set_mesh(mesh):
+    dens = jax.jit(sm)(g, np.zeros((spec.n_blocks, 256), np.float32))
+print("HOPS," + ",".join(f"{float(d):.5f}" for d in np.asarray(dens)))
+"""
+
+
+def main() -> None:
+    from repro.core import metrics
+    n_params = 25_000_000
+    block = 1024
+    nb = n_params // block
+    k = nb // 64
+    for n in (8, 16, 32, 64, 96, 256):
+        dense = metrics.dense_wire_bytes(nb, block, n)
+        iwp = metrics.iwp_wire_bytes(nb, block, k, n, 4)
+        dgc_b = metrics.dgc_wire_bytes(nb, block, k, n)
+        emit(f"fig78/bytes_per_dev_n{n}", 0.0,
+             f"dense={dense/1e6:.1f}MB;iwp={iwp/1e6:.2f}MB;"
+             f"dgc={dgc_b/1e6:.1f}MB;iwp_ratio={dense/iwp:.1f}x;"
+             f"dgc_ratio={dense/dgc_b:.1f}x")
+    out = run_py(_SIM, devices=8)
+    for line in out.splitlines():
+        if line.startswith("HOPS,"):
+            emit("fig78/dgc_measured_hop_densities", 0.0,
+                 line.split(",", 1)[1].replace(",", ";"))
+
+
+if __name__ == "__main__":
+    main()

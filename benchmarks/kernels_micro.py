@@ -1,0 +1,45 @@
+"""Kernel microbenchmarks: jnp reference path timings on CPU (the Pallas
+kernels compile for TPU; interpret-mode wall time is not meaningful perf, so
+we report the oracle path that the CPU flow actually uses, plus interpret
+mode for completeness)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks._util import emit, timeit
+from repro.kernels import ops
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    nb, block, k = 4096, 1024, 64
+    g = jnp.asarray(rng.normal(size=(nb, block)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(nb, block)).astype(np.float32))
+    idx = jnp.asarray(np.sort(rng.choice(nb, k, replace=False))
+                      .astype(np.int32))
+    pay = jnp.asarray(rng.normal(size=(k, block)).astype(np.float32))
+
+    f_imp = jax.jit(lambda a, b: ops.block_importance(a, b))
+    emit("kernels/block_importance_4M_ref", timeit(f_imp, g, w), "jnp")
+    f_res = jax.jit(lambda a, b: ops.residual_update(a, b, 0.9))
+    emit("kernels/residual_update_4M_ref", timeit(f_res, g, w), "jnp")
+    f_gat = jax.jit(lambda a, i: ops.block_gather(a, i))
+    emit("kernels/block_gather_ref", timeit(f_gat, g, idx), "jnp")
+    f_sca = jax.jit(lambda p, i: ops.block_scatter(p, i, nb))
+    emit("kernels/block_scatter_ref", timeit(f_sca, pay, idx), "jnp")
+
+    q = jnp.asarray(rng.normal(size=(1, 8, 512, 64)).astype(np.float32))
+    kk = jnp.asarray(rng.normal(size=(1, 2, 512, 64)).astype(np.float32))
+    f_fa = jax.jit(lambda a, b, c: ops.flash_attention(a, b, c))
+    emit("kernels/attention_ref_512", timeit(f_fa, q, kk, kk), "jnp")
+    # interpret-mode Pallas (correctness path; CPU-emulated, not TPU perf)
+    f_fa_p = jax.jit(lambda a, b, c: ops.flash_attention(
+        a, b, c, use_pallas=True, block_q=128, block_k=128))
+    emit("kernels/attention_pallas_interpret_512",
+         timeit(f_fa_p, q, kk, kk, warmup=1, iters=3), "interpret")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Roofline aggregation: read experiments/dryrun/*.json and emit the
+per-(arch x shape x mesh) table used by EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks._util import emit, ROOT
+
+DRYRUN_DIR = os.path.join(ROOT, "experiments", "dryrun")
+
+
+def rows(mesh: str = "single"):
+    out = []
+    for fn in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*__{mesh}.json"))):
+        with open(fn) as f:
+            out.append(json.load(f))
+    return out
+
+
+def markdown_table(mesh: str = "single") -> str:
+    lines = [
+        "| arch | shape | compute (ms) | memory (ms) | collective (ms) | "
+        "dominant | args+temp GB/dev | fits 16G | useful-FLOPs ratio |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows(mesh):
+        if r.get("status") != "ok":
+            continue
+        t = r["roofline_terms_s"]
+        mem_gb = (r["memory"]["argument_bytes"]
+                  + r["memory"]["temp_bytes"]) / 1e9
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute']*1e3:.2f} | "
+            f"{t['memory']*1e3:.2f} | {t['collective']*1e3:.2f} | "
+            f"{r['dominant']} | {mem_gb:.1f} | "
+            f"{'Y' if r['fits_hbm'] else 'N'} | "
+            f"{r['useful_flops_ratio']:.2f} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    for mesh in ("single", "multipod"):
+        got = rows(mesh)
+        for r in got:
+            if r.get("status") != "ok":
+                continue
+            t = r["roofline_terms_s"]
+            emit(f"roofline/{mesh}/{r['arch']}/{r['shape']}",
+                 t[r["dominant"]] * 1e6,
+                 f"dominant={r['dominant']};"
+                 f"compute_ms={t['compute']*1e3:.2f};"
+                 f"memory_ms={t['memory']*1e3:.2f};"
+                 f"collective_ms={t['collective']*1e3:.2f};"
+                 f"fits={r['fits_hbm']}")
+        if not got:
+            emit(f"roofline/{mesh}/none", 0.0,
+                 "no dryrun results yet (run repro.launch.dryrun)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Benchmark harness: one module per paper table/figure + system micro-
+benches. Prints ``name,us_per_call,derived`` CSV lines.
+
+  table1_compression - paper Table I (compression ratio, fixed vs layerwise)
+  fig56_convergence  - paper Figs 5/6 (convergence parity)
+  fig78_bandwidth    - paper Figs 7/8 + the densification claim (2)
+  ablations          - paper's threshold sweep + ratio/selector ablations
+  ring_micro         - ring all-reduce vs native psum (simulated 8 devices)
+  kernels_micro      - compress-path + attention kernels
+  roofline           - Roofline table from the dry-run artifacts
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+MODULES = ["kernels_micro", "ring_micro", "fig78_bandwidth",
+           "table1_compression", "fig56_convergence", "ablations",
+           "roofline"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module names")
+    args = ap.parse_args()
+    mods = args.only.split(",") if args.only else MODULES
+    print("name,us_per_call,derived")
+    failures = 0
+    for m in mods:
+        try:
+            mod = __import__(f"benchmarks.{m}", fromlist=["main"])
+            mod.main()
+        except Exception:
+            failures += 1
+            print(f"{m},0.0,FAILED", file=sys.stdout)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

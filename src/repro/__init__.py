@@ -1,0 +1,3 @@
+"""repro: Importance Weighted Pruning on Ring AllReduce (Cheng & Xu, 2019)
+as a production-grade multi-pod JAX/TPU training framework."""
+__version__ = "1.0.0"

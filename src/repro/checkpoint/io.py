@@ -1,0 +1,70 @@
+"""Pytree checkpointing: one .npz per step + a json manifest of the tree
+structure and (optionally) the sharding specs that produced the arrays.
+Atomic via write-to-tmp + rename. No external deps (no orbax offline).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(_path_str(p) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any,
+                    extra: Optional[dict] = None) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    arrays = _flatten_with_paths(tree)
+    treedef = jax.tree.structure(tree)
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    tmp = path + ".tmp"
+    np.savez(tmp, **arrays)
+    os.replace(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp, path)
+    manifest = {"step": step, "treedef": str(treedef),
+                "keys": sorted(arrays), "extra": extra or {}}
+    mpath = os.path.join(ckpt_dir, f"step_{step:08d}.json")
+    with open(mpath + ".tmp", "w") as f:
+        json.dump(manifest, f)
+    os.replace(mpath + ".tmp", mpath)
+    return path
+
+
+def load_checkpoint(ckpt_dir: str, step: int, example_tree: Any) -> Any:
+    """Restore into the structure of ``example_tree``."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    data = np.load(path)
+    flat = jax.tree_util.tree_flatten_with_path(example_tree)
+    leaves = []
+    for p, leaf in flat[0]:
+        key = "/".join(_path_str(x) for x in p)
+        arr = data[key]
+        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree.unflatten(flat[1], leaves)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
+             if (m := re.match(r"step_(\d+)\.npz$", f))]
+    return max(steps) if steps else None

@@ -1,0 +1,56 @@
+"""Config registry: ``get_arch(id)`` / ``ARCH_IDS`` / input shapes."""
+from __future__ import annotations
+
+from repro.configs.base import (ArchConfig, CNNConfig, InputShape,
+                                INPUT_SHAPES, MoEConfig, MLAConfig,
+                                RWKVConfig, RGLRUConfig)
+
+from repro.configs import (command_r_plus_104b, deepseek_v2_236b, rwkv6_3b,
+                           internvl2_1b, llama4_scout_17b_a16e,
+                           recurrentgemma_2b, hubert_xlarge, qwen1_5_0_5b,
+                           stablelm_12b, llama3_2_3b, paper_models)
+
+_ARCHS = {
+    cfg.name: cfg
+    for cfg in [
+        command_r_plus_104b.CONFIG,
+        deepseek_v2_236b.CONFIG,
+        rwkv6_3b.CONFIG,
+        internvl2_1b.CONFIG,
+        llama4_scout_17b_a16e.CONFIG,
+        recurrentgemma_2b.CONFIG,
+        hubert_xlarge.CONFIG,
+        qwen1_5_0_5b.CONFIG,
+        stablelm_12b.CONFIG,
+        llama3_2_3b.CONFIG,
+    ]
+}
+
+ARCH_IDS = tuple(_ARCHS)
+
+CNN_MODELS = {
+    m.name: m for m in [paper_models.ALEXNET, paper_models.RESNET50,
+                        paper_models.RESNET101_CIFAR]
+}
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in _ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_ARCHS)}")
+    return _ARCHS[name]
+
+
+def get_cnn(name: str) -> CNNConfig:
+    return CNN_MODELS[name]
+
+
+def shape_supported(arch: ArchConfig, shape_name: str) -> tuple[bool, str]:
+    """Dry-run skip matrix (documented in DESIGN.md §5)."""
+    shape = INPUT_SHAPES[shape_name]
+    if shape.kind == "decode" and not arch.supports_decode:
+        return False, "encoder-only: no decode step"
+    if shape_name == "long_500k":
+        if arch.subquadratic or arch.long_context_window:
+            return True, ""
+        return False, "pure full-attention arch: long_500k requires sub-quadratic attention"
+    return True, ""

@@ -1,0 +1,220 @@
+"""Architecture + run configuration for the repro framework.
+
+Every assigned architecture gets one module in this package defining a
+``CONFIG: ArchConfig``. The registry in ``__init__`` exposes them by id.
+
+The *full* configs are only ever lowered (dry-run, ShapeDtypeStruct); smoke
+tests and examples use ``reduced()`` variants that run on CPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Tuple
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 1
+    d_ff_expert: int = 0
+    # layers [0, first_k_dense) use a dense FFN instead of MoE
+    first_k_dense: int = 0
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    router_z_weight: float = 1e-3
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek-V2 multi-head latent attention."""
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 1536
+    rope_head_dim: int = 64   # decoupled RoPE dims per head
+    v_head_dim: int = 128     # value head dim (qk nope dim == head_dim)
+
+
+@dataclass(frozen=True)
+class RWKVConfig:
+    head_size: int = 64
+    decay_lora: int = 64      # rank of the data-dependent decay LoRA
+    mix_lora: int = 32        # rank of the token-shift mix LoRA
+
+
+@dataclass(frozen=True)
+class RGLRUConfig:
+    lru_width: int = 0        # defaults to d_model
+    conv1d_width: int = 4
+    block_pattern: Tuple[str, ...] = ("recurrent", "recurrent", "local_attn")
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | vlm | audio
+    source: str                      # citation (paper / model card)
+    n_layers: int = 0
+    d_model: int = 0
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    head_dim: int = 0
+    d_ff: int = 0
+    vocab_size: int = 0
+
+    qkv_bias: bool = False
+    o_bias: bool = False
+    mlp_bias: bool = False
+    tie_embeddings: bool = False
+    norm: str = "rmsnorm"            # rmsnorm | layernorm
+    act: str = "silu"                # silu | gelu | relu
+    glu: bool = True                 # gated MLP (SwiGLU/GeGLU); False = plain 2-matmul MLP
+    rope_theta: float = 10000.0
+    rope_pct: float = 1.0            # partial rotary (stablelm: 0.25)
+    parallel_block: bool = False     # command-r: attn and mlp in parallel off one norm
+    is_causal: bool = True           # False => bidirectional encoder (hubert)
+    embed_scale: bool = False        # multiply embeddings by sqrt(d_model) (gemma-style)
+    logit_softcap: float = 0.0
+
+    # per-layer attention pattern, cycled: entries from
+    #   full | local | chunked | nope_full | recurrent | rwkv
+    attn_pattern: Tuple[str, ...] = ("full",)
+    window: int = 0                  # local / sliding window size
+    chunk: int = 0                   # llama4 chunked-local attention chunk
+
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    rwkv: Optional[RWKVConfig] = None
+    rglru: Optional[RGLRUConfig] = None
+
+    # modality frontend stub: none | vision | audio
+    frontend: str = "none"
+    n_prefix_tokens: int = 0         # vision patch tokens prepended (vlm)
+
+    supports_decode: bool = True     # False for encoder-only
+    subquadratic: bool = False       # eligible for long_500k
+    long_context_window: int = 0     # if >0, decode for long_500k uses a ring-buffer
+                                     # sliding window of this size (variant config)
+
+    # ---- distribution defaults for the production mesh ----
+    fsdp: bool = False               # shard layer-stacked params over 'data'
+    remat: str = "full"              # none | full
+    train_microbatches: int = 8      # grad-accum steps per train_step
+    sync: str = "iwp_ring"           # dense_psum | dense_ring | iwp_ring | iwp_hier | dgc_ring
+
+    # ---- IWP (paper) hyper-parameters ----
+    iwp_block: int = 1024            # elements per compression block (8*128)
+    iwp_ratio: float = 1.0 / 64.0    # k_max wire budget as a fraction of blocks
+    iwp_threshold: float = 0.01      # fixed importance threshold (paper: 0.005..0.1)
+    iwp_layerwise: bool = True       # Eq.4 layer-wise threshold
+    iwp_selectors: int = 4           # r random selector nodes for mask agreement
+    iwp_warmup_steps: int = 200      # compression warm-up ramp
+    iwp_momentum: float = 0.9
+
+    def __post_init__(self):
+        if self.head_dim == 0 and self.n_heads:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+
+    @property
+    def is_encoder(self) -> bool:
+        return not self.is_causal
+
+    def layer_kinds(self) -> Tuple[str, ...]:
+        """Resolved per-layer kind list of length n_layers."""
+        pat = self.attn_pattern
+        if self.rglru is not None:
+            pat = self.rglru.block_pattern
+        return tuple(pat[i % len(pat)] for i in range(self.n_layers))
+
+    def moe_layer_mask(self) -> Tuple[bool, ...]:
+        if self.moe is None:
+            return tuple(False for _ in range(self.n_layers))
+        return tuple(i >= self.moe.first_k_dense for i in range(self.n_layers))
+
+    def reduced(self) -> "ArchConfig":
+        """Tiny same-family variant for CPU smoke tests (<=2 layers, d<=256)."""
+        pat_len = len(self.rglru.block_pattern) if self.rglru else len(self.attn_pattern)
+        n_layers = max(2, pat_len)
+        kw = dict(
+            name=self.name + "-reduced",
+            n_layers=n_layers,
+            d_model=128,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 2) if self.n_kv_heads else 0,
+            head_dim=32,
+            d_ff=256,
+            vocab_size=512,
+            window=min(self.window, 64) if self.window else 0,
+            chunk=min(self.chunk, 64) if self.chunk else 0,
+            n_prefix_tokens=min(self.n_prefix_tokens, 4),
+            train_microbatches=1,
+            remat="none",
+            fsdp=False,
+            iwp_ratio=1.0 / 4.0,
+            iwp_warmup_steps=0,
+        )
+        if self.moe is not None:
+            kw["moe"] = dataclasses.replace(
+                self.moe,
+                n_experts=4,
+                n_shared_experts=min(self.moe.n_shared_experts, 1),
+                top_k=min(self.moe.top_k, 2),
+                d_ff_expert=128,
+                first_k_dense=min(self.moe.first_k_dense, 1),
+            )
+        if self.mla is not None:
+            kw["mla"] = MLAConfig(kv_lora_rank=32, q_lora_rank=48,
+                                  rope_head_dim=16, v_head_dim=32)
+        if self.rwkv is not None:
+            kw["rwkv"] = RWKVConfig(head_size=32, decay_lora=16, mix_lora=8)
+            kw["n_heads"] = 4
+            kw["head_dim"] = 32
+        if self.rglru is not None:
+            kw["rglru"] = dataclasses.replace(self.rglru, lru_width=128, conv1d_width=4)
+        if self.long_context_window:
+            kw["long_context_window"] = 64
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class CNNConfig:
+    """Paper-native vision models (AlexNet / ResNet) for the faithful repro."""
+    name: str
+    source: str
+    kind: str                        # alexnet | resnet
+    depth: int = 50                  # resnet depth (18/20/50/101)
+    n_classes: int = 1000
+    width: int = 64                  # stem width
+    image_size: int = 224
+
+    # IWP hyper-parameters (paper experiments)
+    iwp_block: int = 256
+    iwp_ratio: float = 1.0 / 64.0
+    iwp_threshold: float = 0.01
+    iwp_layerwise: bool = True
+    iwp_selectors: int = 4
+    iwp_warmup_steps: int = 100
+    iwp_momentum: float = 0.9
+
+    def reduced(self) -> "CNNConfig":
+        return dataclasses.replace(
+            self, name=self.name + "-reduced",
+            depth=min(self.depth, 20) if self.kind == "resnet" else self.depth,
+            n_classes=10, width=16, image_size=32,
+            iwp_ratio=1.0 / 4.0, iwp_warmup_steps=0)
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                        # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k":    InputShape("train_4k",    4_096,   256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768,   32, "prefill"),
+    "decode_32k":  InputShape("decode_32k",  32_768,  128, "decode"),
+    "long_500k":   InputShape("long_500k",  524_288,    1, "decode"),
+}

@@ -1,0 +1,33 @@
+"""Command R+ 104B [hf:CohereForAI/c4ai-command-r-v01 family].
+
+Dense decoder, GQA (8 kv heads), no biases, parallel attention/FFN block,
+LayerNorm (non-RMS), tied embeddings, full attention.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="command-r-plus-104b",
+    family="dense",
+    source="hf:CohereForAI/c4ai-command-r-v01",
+    n_layers=64,
+    d_model=12288,
+    n_heads=96,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=33792,
+    vocab_size=256000,
+    qkv_bias=False,
+    tie_embeddings=True,
+    norm="layernorm",
+    act="silu",
+    glu=True,
+    rope_theta=75_000_000.0,
+    parallel_block=True,
+    attn_pattern=("full",),
+    supports_decode=True,
+    subquadratic=False,
+    # 104B params cannot be DP-replicated: FSDP + hierarchical IWP sync.
+    fsdp=True,
+    sync="iwp_hier",
+    train_microbatches=16,
+)

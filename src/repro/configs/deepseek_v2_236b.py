@@ -1,0 +1,40 @@
+"""DeepSeek-V2 236B [arXiv:2405.04434].
+
+MLA attention (kv_lora_rank=512, q_lora_rank=1536, decoupled RoPE 64,
+qk_nope 128, v 128), MoE with 2 shared + 160 routed experts top-6
+(expert d_ff=1536), first layer dense (d_ff=12288).
+"""
+from repro.configs.base import ArchConfig, MoEConfig, MLAConfig
+
+CONFIG = ArchConfig(
+    name="deepseek-v2-236b",
+    family="moe",
+    source="arXiv:2405.04434",
+    n_layers=60,
+    d_model=5120,
+    n_heads=128,
+    n_kv_heads=128,          # MLA: all heads read the shared latent cache
+    head_dim=128,            # qk nope dim
+    d_ff=12288,              # dense layers (first_k_dense)
+    vocab_size=102400,
+    norm="rmsnorm",
+    act="silu",
+    glu=True,
+    rope_theta=10000.0,
+    attn_pattern=("full",),
+    moe=MoEConfig(
+        n_experts=160,
+        n_shared_experts=2,
+        top_k=6,
+        d_ff_expert=1536,
+        first_k_dense=1,
+        capacity_factor=1.25,
+    ),
+    mla=MLAConfig(kv_lora_rank=512, q_lora_rank=1536, rope_head_dim=64,
+                  v_head_dim=128),
+    supports_decode=True,
+    subquadratic=False,      # MLA is full attention over the latent cache
+    fsdp=True,
+    sync="iwp_hier",
+    train_microbatches=16,
+)

@@ -1,0 +1,34 @@
+"""HuBERT X-Large [arXiv:2106.07447].
+
+Encoder-only (bidirectional) transformer, wav2vec2-style: 48L, d=1280,
+16 heads, GeLU MLP (no GLU), LayerNorm. Targets = 504-entry codebook
+(masked prediction). The conv waveform feature extractor is a STUB
+frontend: input_specs provides precomputed frame embeddings.
+No decode shapes (encoder-only) — see DESIGN.md skip matrix.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="hubert-xlarge",
+    family="audio",
+    source="arXiv:2106.07447",
+    n_layers=48,
+    d_model=1280,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=80,
+    d_ff=5120,
+    vocab_size=504,
+    qkv_bias=True,
+    norm="layernorm",
+    act="gelu",
+    glu=False,
+    is_causal=False,
+    attn_pattern=("full",),
+    frontend="audio",
+    supports_decode=False,
+    subquadratic=False,
+    fsdp=False,
+    sync="iwp_ring",
+    train_microbatches=4,
+)

@@ -1,0 +1,34 @@
+"""InternVL2-1B [arXiv:2404.16821].
+
+Language backbone = Qwen2-0.5B (24L, d=896, 14H GQA kv=2, QKV bias).
+Vision side (InternViT-300M + MLP projector) is a STUB frontend per the
+assignment: input_specs provides precomputed patch embeddings (256 tokens).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="internvl2-1b",
+    family="vlm",
+    source="arXiv:2404.16821",
+    n_layers=24,
+    d_model=896,
+    n_heads=14,              # padded to 16 for 16-way TP; pad heads masked
+    n_kv_heads=2,
+    head_dim=64,
+    d_ff=4864,
+    vocab_size=151655,
+    qkv_bias=True,
+    tie_embeddings=True,
+    norm="rmsnorm",
+    act="silu",
+    glu=True,
+    rope_theta=1_000_000.0,
+    attn_pattern=("full",),
+    frontend="vision",
+    n_prefix_tokens=256,
+    supports_decode=True,
+    subquadratic=False,
+    fsdp=False,
+    sync="iwp_ring",
+    train_microbatches=4,
+)

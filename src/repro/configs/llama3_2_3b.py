@@ -1,0 +1,33 @@
+"""Llama-3.2-3B [hf:meta-llama/Llama-3.2-3B family].
+
+Dense decoder, GQA kv=8, rope_theta=500k, tied embeddings.
+long_500k lowers via an explicit sliding-window (8192) variant of the
+decode path (ring-buffer KV cache) — noted in DESIGN.md as a variant,
+not the stock model.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama3.2-3b",
+    family="dense",
+    source="hf:meta-llama/Llama-3.2-3B",
+    n_layers=28,
+    d_model=3072,
+    n_heads=24,              # padded to 32 for 16-way TP; pad heads masked
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=128256,
+    tie_embeddings=True,
+    norm="rmsnorm",
+    act="silu",
+    glu=True,
+    rope_theta=500000.0,
+    attn_pattern=("full",),
+    supports_decode=True,
+    subquadratic=False,
+    long_context_window=8192,   # sliding-window VARIANT enables long_500k
+    fsdp=False,
+    sync="iwp_ring",
+    train_microbatches=4,
+)

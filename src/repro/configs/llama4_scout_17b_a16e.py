@@ -1,0 +1,42 @@
+"""Llama-4 Scout 17B-active / 16 experts [hf:meta-llama/Llama-4-Scout-17B-16E].
+
+MoE top-1 with one shared expert per layer; interleaved attention:
+3-of-4 layers chunked-local (8192) with RoPE, every 4th NoPE global.
+Early-fusion multimodal in the original; assigned here as the text stack.
+"""
+from repro.configs.base import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="llama4-scout-17b-a16e",
+    family="moe",
+    source="hf:meta-llama/Llama-4-Scout-17B-16E",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,              # padded to 48 for 16-way TP; pad heads masked
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,               # shared-expert / dense ffn width
+    vocab_size=202048,
+    tie_embeddings=False,
+    norm="rmsnorm",
+    act="silu",
+    glu=True,
+    rope_theta=500000.0,
+    attn_pattern=("chunked", "chunked", "chunked", "nope_full"),
+    chunk=8192,
+    moe=MoEConfig(
+        n_experts=16,
+        n_shared_experts=1,
+        top_k=1,
+        d_ff_expert=8192,
+        first_k_dense=0,
+        capacity_factor=1.25,
+    ),
+    supports_decode=True,
+    # 3/4 layers are chunked-local; global layers are O(S) reads per decoded
+    # token -> long_500k eligible (see DESIGN.md skip matrix).
+    subquadratic=True,
+    fsdp=True,               # ~109B total params
+    sync="iwp_hier",
+    train_microbatches=8,
+)

@@ -1,0 +1,36 @@
+"""The paper's own experiment models (Table I / Figs 5-8).
+
+AlexNet + ResNet50 on ImageNet, ResNet101 on CIFAR10. These are the
+faithful-reproduction models: examples/train_resnet_iwp.py and
+benchmarks/table1_compression.py exercise them (reduced scale, synthetic
+teacher-labelled data — no datasets ship offline).
+"""
+from repro.configs.base import CNNConfig
+
+ALEXNET = CNNConfig(
+    name="alexnet",
+    source="paper Table I (Krizhevsky 2012)",
+    kind="alexnet",
+    n_classes=1000,
+    image_size=224,
+    iwp_ratio=1.0 / 64.0,    # paper: 64x compression
+)
+
+RESNET50 = CNNConfig(
+    name="resnet50",
+    source="paper Table I (He et al. 2016)",
+    kind="resnet",
+    depth=50,
+    n_classes=1000,
+    image_size=224,
+    iwp_ratio=1.0 / 58.8,    # paper: 58.8x compression
+)
+
+RESNET101_CIFAR = CNNConfig(
+    name="resnet101-cifar",
+    source="paper §IV-A (CIFAR10)",
+    kind="resnet",
+    depth=101,
+    n_classes=10,
+    image_size=32,
+)

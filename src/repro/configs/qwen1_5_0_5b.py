@@ -1,0 +1,30 @@
+"""Qwen1.5-0.5B [hf:Qwen/Qwen1.5-0.5B].
+
+Dense decoder with QKV bias, tied embeddings, full attention.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen1.5-0.5b",
+    family="dense",
+    source="hf:Qwen/Qwen1.5-0.5B",
+    n_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=64,
+    d_ff=2816,
+    vocab_size=151936,
+    qkv_bias=True,
+    tie_embeddings=True,
+    norm="rmsnorm",
+    act="silu",
+    glu=True,
+    rope_theta=1_000_000.0,
+    attn_pattern=("full",),
+    supports_decode=True,
+    subquadratic=False,
+    fsdp=False,
+    sync="iwp_ring",
+    train_microbatches=2,
+)

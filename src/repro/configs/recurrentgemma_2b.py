@@ -1,0 +1,34 @@
+"""RecurrentGemma-2B (Griffin) [arXiv:2402.19427].
+
+Hybrid: RG-LRU recurrent blocks + local attention, 2:1 pattern
+(recurrent, recurrent, local_attn), MQA (1 kv head), window 2048,
+GeGLU FFN, embedding scaled by sqrt(d_model).
+"""
+from repro.configs.base import ArchConfig, RGLRUConfig
+
+CONFIG = ArchConfig(
+    name="recurrentgemma-2b",
+    family="hybrid",
+    source="arXiv:2402.19427",
+    n_layers=26,
+    d_model=2560,
+    n_heads=10,              # padded to 16 for 16-way TP; pad heads masked
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=7680,
+    vocab_size=256000,
+    norm="rmsnorm",
+    act="gelu",
+    glu=True,
+    rope_theta=10000.0,
+    attn_pattern=("recurrent", "recurrent", "local"),
+    window=2048,
+    embed_scale=True,
+    rglru=RGLRUConfig(lru_width=2560, conv1d_width=4,
+                      block_pattern=("recurrent", "recurrent", "local")),
+    supports_decode=True,
+    subquadratic=True,       # bounded state: LRU h + 2048-window cache
+    fsdp=False,
+    sync="iwp_ring",
+    train_microbatches=4,
+)

@@ -1,0 +1,30 @@
+"""RWKV-6 "Finch" 3B [arXiv:2404.05892].
+
+Attention-free: time-mix with data-dependent decay (LoRA-parameterised),
+token shift, channel-mix (relu^2) FFN. 40 heads of size 64 (padded to 48
+for 16-way tensor parallel; pad heads masked).
+"""
+from repro.configs.base import ArchConfig, RWKVConfig
+
+CONFIG = ArchConfig(
+    name="rwkv6-3b",
+    family="ssm",
+    source="arXiv:2404.05892",
+    n_layers=32,
+    d_model=2560,
+    n_heads=40,              # d_model / head_size
+    n_kv_heads=40,
+    head_dim=64,
+    d_ff=8960,
+    vocab_size=65536,
+    norm="layernorm",
+    act="relu",              # channel-mix uses relu^2
+    glu=False,
+    attn_pattern=("rwkv",),
+    rwkv=RWKVConfig(head_size=64, decay_lora=64, mix_lora=32),
+    supports_decode=True,
+    subquadratic=True,       # recurrent state: long_500k eligible
+    fsdp=False,
+    sync="iwp_ring",
+    train_microbatches=8,
+)

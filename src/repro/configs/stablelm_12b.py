@@ -1,0 +1,29 @@
+"""StableLM-2-12B [hf:stabilityai/stablelm-2-12b family].
+
+Dense decoder, GQA kv=8, partial rotary (25%), LayerNorm, no biases.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="stablelm-12b",
+    family="dense",
+    source="hf:stabilityai/stablelm-2-1_6b (scaled per assignment)",
+    n_layers=40,
+    d_model=5120,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=160,
+    d_ff=13824,
+    vocab_size=100352,
+    norm="layernorm",
+    act="silu",
+    glu=True,
+    rope_theta=10000.0,
+    rope_pct=0.25,
+    attn_pattern=("full",),
+    supports_decode=True,
+    subquadratic=False,
+    fsdp=False,
+    sync="iwp_ring",
+    train_microbatches=8,
+)

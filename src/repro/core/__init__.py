@@ -1,0 +1,8 @@
+"""The paper's contribution: importance-weighted pruning on ring all-reduce.
+
+Modules: importance (|g/w| metric, Eq.4 thresholds, random admission),
+masks (shared-mask agreement, Algorithm 1), compressor (error feedback),
+ring (ppermute ring collectives), dgc (densifying per-node top-k baseline),
+sync (gradient-sync strategies), tpops (manual-SPMD boundary ops),
+ledger (collective byte accounting), flatten, metrics.
+"""

@@ -1,0 +1,94 @@
+"""Pytree <-> block-partitioned flat view for the compressor.
+
+Gradient pytrees are flattened into a single ``[n_blocks, block]`` matrix
+(zero-padded tail). Each block carries a static ``layer id`` used by the
+layer-wise threshold (paper Eq. 4): a plain leaf is one layer; a stacked leaf
+(leading layer-group dim, marked via ``stacked_leaves``) contributes one layer
+per leading index.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class FlatSpec:
+    treedef: Any
+    shapes: Tuple[Tuple[int, ...], ...]
+    dtypes: Tuple[Any, ...]
+    block: int
+    n_blocks: int
+    # per-block static layer id (np array, host-side)
+    layer_ids: np.ndarray
+    n_layers: int
+    # per-leaf (start_elem, n_elem) into the unpadded concatenation
+    leaf_slices: Tuple[Tuple[int, int], ...]
+
+    @property
+    def n_elems(self) -> int:
+        return self.n_blocks * self.block
+
+
+def make_flat_spec(tree, block: int, stacked: Any = None) -> FlatSpec:
+    """``stacked``: optional pytree of bools (same structure) marking leaves
+    whose dim0 is a layer-group dim."""
+    leaves, treedef = jax.tree.flatten(tree)
+    if stacked is None:
+        stacked_flags = [False] * len(leaves)
+    else:
+        stacked_flags = jax.tree.flatten(stacked)[0]
+        assert len(stacked_flags) == len(leaves)
+
+    shapes, dtypes, slices = [], [], []
+    layer_starts: List[int] = []     # first element index of each layer
+    off = 0
+    for leaf, is_stacked in zip(leaves, stacked_flags):
+        size = int(np.prod(leaf.shape)) if leaf.shape else 1
+        shapes.append(tuple(leaf.shape))
+        dtypes.append(leaf.dtype)
+        slices.append((off, size))
+        if is_stacked and leaf.ndim >= 1 and leaf.shape[0] > 1:
+            g = leaf.shape[0]
+            per = size // g
+            layer_starts.extend(off + j * per for j in range(g))
+        else:
+            layer_starts.append(off)
+        off += size
+
+    n_blocks = (off + block - 1) // block
+    # a block's layer = the layer containing its first element
+    bstarts = np.arange(n_blocks, dtype=np.int64) * block
+    lid = (np.searchsorted(np.asarray(layer_starts, np.int64), bstarts,
+                           side="right") - 1).astype(np.int32)
+    lid = np.clip(lid, 0, max(len(layer_starts) - 1, 0))
+    return FlatSpec(treedef=treedef, shapes=tuple(shapes),
+                    dtypes=tuple(dtypes), block=block, n_blocks=n_blocks,
+                    layer_ids=lid, n_layers=max(len(layer_starts), 1),
+                    leaf_slices=tuple(slices))
+
+
+def flatten_tree(tree, spec: FlatSpec, dtype=jnp.float32) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    flat = jnp.concatenate([l.astype(dtype).reshape(-1) for l in leaves])
+    pad = spec.n_elems - flat.size
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), dtype)])
+    return flat.reshape(spec.n_blocks, spec.block)
+
+
+def unflatten_tree(flat: jnp.ndarray, spec: FlatSpec):
+    v = flat.reshape(-1)
+    leaves = []
+    for (off, size), shape, dt in zip(spec.leaf_slices, spec.shapes,
+                                      spec.dtypes):
+        leaves.append(lax_slice(v, off, size).reshape(shape).astype(dt))
+    return jax.tree.unflatten(spec.treedef, leaves)
+
+
+def lax_slice(v, off, size):
+    return jax.lax.slice_in_dim(v, off, off + size, axis=0)

@@ -1,0 +1,72 @@
+"""Gradient importance (the paper's metric) and thresholds.
+
+Importance of a parameter = |∇ω / ω| — the relative change the gradient
+would make (paper §III-B). Block importance = mean element importance over an
+8x128 tile (TPU adaptation, DESIGN.md §2).
+
+Layer-wise threshold (Eq. 4):
+    thr_l = alpha + beta * (var/mean)   if var/mean > C
+          = alpha - beta * (var/mean)   otherwise
+(disordered layers compress harder; layers with large mean importance get a
+lower threshold).
+
+Random admission (§III-C): gradients under the threshold are sent with
+probability P = importance / thr. We realise this as an *effective score*
+``eff = importance / (thr * u)`` with ``u ~ U(0,1]``: P(eff > 1) =
+min(1, importance/thr) — exactly the paper's admission probability — and the
+top-k wire budget is filled in decreasing ``eff`` order.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+EPS = 1e-8
+
+
+def block_scores(g_blocks: jnp.ndarray, w_blocks: jnp.ndarray,
+                 eps: float = EPS) -> jnp.ndarray:
+    """Mean |g/w| per block. [nb, block] -> [nb], float32."""
+    g = g_blocks.astype(jnp.float32)
+    w = w_blocks.astype(jnp.float32)
+    imp = jnp.abs(g) / (jnp.abs(w) + eps)
+    return imp.mean(axis=-1)
+
+
+def layer_stats(scores: jnp.ndarray, layer_ids: np.ndarray, n_layers: int):
+    """Per-layer mean and variance of block importance. -> ([L], [L])."""
+    lid = jnp.asarray(layer_ids)
+    cnt = jax.ops.segment_sum(jnp.ones_like(scores), lid, n_layers)
+    s1 = jax.ops.segment_sum(scores, lid, n_layers)
+    s2 = jax.ops.segment_sum(scores * scores, lid, n_layers)
+    mean = s1 / jnp.maximum(cnt, 1.0)
+    var = jnp.maximum(s2 / jnp.maximum(cnt, 1.0) - mean * mean, 0.0)
+    return mean, var
+
+
+def layerwise_threshold(mean: jnp.ndarray, var: jnp.ndarray, alpha: float,
+                        beta: float, c: float) -> jnp.ndarray:
+    """Paper Eq. 4. -> per-layer threshold [L]."""
+    vm = var / (mean + EPS)
+    thr = jnp.where(vm > c, alpha + beta * vm, alpha - beta * vm)
+    return jnp.maximum(thr, 0.05 * alpha)     # keep threshold positive
+
+
+def effective_scores(scores: jnp.ndarray, thr_per_block: jnp.ndarray,
+                     key) -> jnp.ndarray:
+    """Random-admission effective score; > 1 means 'admitted'."""
+    u = jax.random.uniform(key, scores.shape, jnp.float32,
+                           minval=jnp.finfo(jnp.float32).tiny, maxval=1.0)
+    return scores / (thr_per_block * u + EPS)
+
+
+def block_thresholds(scores: jnp.ndarray, layer_ids: np.ndarray,
+                     n_layers: int, *, layerwise: bool, alpha: float,
+                     beta: float = 0.5, c: float = 1.0) -> jnp.ndarray:
+    """Per-block threshold, fixed (= alpha) or layer-wise (Eq. 4)."""
+    if not layerwise:
+        return jnp.full(scores.shape, alpha, jnp.float32)
+    mean, var = layer_stats(scores, layer_ids, n_layers)
+    thr_l = layerwise_threshold(mean, var, alpha, beta, c)
+    return thr_l[jnp.asarray(layer_ids)]

@@ -1,0 +1,104 @@
+"""Trace-time collective byte accounting.
+
+The roofline collective term needs *dynamic* bytes-on-wire, but HLO text only
+shows static ops (a ring step inside a fori_loop appears once). Every
+collective in this framework goes through ``repro.core.tpops`` /
+``repro.core.ring``, which record into the active :class:`Ledger` at trace
+time; loops multiply via :meth:`Ledger.loop`.
+
+Entries carry separate forward and backward byte counts; training rooflines
+sum both, inference rooflines sum forward only. A cross-check against
+HLO-parsed collective bytes lives in ``launch/dryrun.py``.
+"""
+from __future__ import annotations
+
+import contextlib
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+
+@dataclass
+class Entry:
+    op: str           # psum | all_gather | reduce_scatter | ppermute | all_to_all
+    axis: str
+    fwd_bytes: float  # per-device bytes sent, already multiplied by loop mults
+    bwd_bytes: float
+    tag: str = ""
+
+
+@dataclass
+class Ledger:
+    entries: List[Entry] = field(default_factory=list)
+    _mult: float = 1.0
+
+    def record(self, op: str, axis: str, fwd_bytes: float,
+               bwd_bytes: float = 0.0, tag: str = "") -> None:
+        self.entries.append(Entry(op, axis, fwd_bytes * self._mult,
+                                  bwd_bytes * self._mult, tag))
+
+    @contextlib.contextmanager
+    def loop(self, n: int):
+        """Multiply everything recorded inside by ``n`` (scan trip count)."""
+        old = self._mult
+        self._mult = old * n
+        try:
+            yield
+        finally:
+            self._mult = old
+
+    # ---- reporting ----
+    def totals(self, include_bwd: bool) -> dict:
+        out: dict = {}
+        for e in self.entries:
+            b = e.fwd_bytes + (e.bwd_bytes if include_bwd else 0.0)
+            out[e.op] = out.get(e.op, 0.0) + b
+        out["total"] = sum(out.values())
+        return out
+
+    def by_axis(self, include_bwd: bool) -> dict:
+        out: dict = {}
+        for e in self.entries:
+            b = e.fwd_bytes + (e.bwd_bytes if include_bwd else 0.0)
+            out[e.axis] = out.get(e.axis, 0.0) + b
+        return out
+
+    def by_tag(self, include_bwd: bool) -> dict:
+        out: dict = {}
+        for e in self.entries:
+            b = e.fwd_bytes + (e.bwd_bytes if include_bwd else 0.0)
+            key = e.tag or e.op
+            out[key] = out.get(key, 0.0) + b
+        return out
+
+
+_ACTIVE: Optional[Ledger] = None
+
+
+@contextlib.contextmanager
+def use(ledger: Ledger):
+    global _ACTIVE
+    old = _ACTIVE
+    _ACTIVE = ledger
+    try:
+        yield ledger
+    finally:
+        _ACTIVE = old
+
+
+def active() -> Optional[Ledger]:
+    return _ACTIVE
+
+
+def record(op: str, axis: str, fwd_bytes: float, bwd_bytes: float = 0.0,
+           tag: str = "") -> None:
+    if _ACTIVE is not None:
+        _ACTIVE.record(op, axis, fwd_bytes, bwd_bytes, tag)
+
+
+@contextlib.contextmanager
+def loop(n: int):
+    if _ACTIVE is None:
+        yield
+    else:
+        with _ACTIVE.loop(n):
+            yield

@@ -1,0 +1,92 @@
+"""Shared-mask agreement on the ring (paper Algorithm 1, lines 5-9).
+
+``r`` pseudo-randomly chosen selector nodes each contribute their top
+``k/r`` block indices (by effective importance score); the candidates are
+AllGather'd and unioned (the paper ORs uint8-encoded masks; with a static
+wire budget the union is an index list — same information, fewer bytes).
+Every node then reduces exactly this shared index set, so the ring payload
+is index-aligned and sparsity does not decay with node count.
+
+``pack_mask_uint8``/``unpack_mask_uint8`` implement the paper's literal
+uint8 mask encoding (used by tests and the bandwidth benchmark for the
+crossover analysis: bitmap beats index list when density > 1/32).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import ledger, tpops
+
+
+def pack_mask_uint8(mask: jnp.ndarray) -> jnp.ndarray:
+    """[n] bool -> [ceil(n/8)] uint8 (paper's encode_uint8)."""
+    n = mask.shape[0]
+    pad = (-n) % 8
+    m = jnp.concatenate([mask, jnp.zeros((pad,), mask.dtype)]) if pad else mask
+    bits = m.reshape(-1, 8).astype(jnp.uint8)
+    weights = (1 << jnp.arange(8, dtype=jnp.uint8))
+    return (bits * weights).sum(axis=-1).astype(jnp.uint8)
+
+
+def unpack_mask_uint8(packed: jnp.ndarray, n: int) -> jnp.ndarray:
+    bits = (packed[:, None] >> jnp.arange(8, dtype=jnp.uint8)) & 1
+    return bits.reshape(-1)[:n].astype(bool)
+
+
+def choose_selectors(key, world: int, r: int) -> jnp.ndarray:
+    """r distinct pseudo-random selector ranks (replicated: same key)."""
+    return jax.random.permutation(key, world)[:r]
+
+
+def local_topk_candidates(eff: jnp.ndarray, k_sel: int) -> jnp.ndarray:
+    """This rank's candidate block indices, best-first. [k_sel] int32."""
+    _, idx = lax.top_k(eff, k_sel)
+    return idx.astype(jnp.int32)
+
+
+def agree_indices(eff: jnp.ndarray, k: int, axes: Sequence[Optional[str]],
+                  key, n_selectors: int,
+                  tag: str = "mask") -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Shared top-k block indices across the ring.
+
+    Returns (idx [k] int32 sorted, weight [k] float32) where weight is 0 for
+    duplicate slots (so scatter-adds stay exact) and 1 otherwise.
+    Deterministic and identical on every rank (key must be replicated).
+    """
+    world = tpops.multi_axis_size(axes)
+    r = max(1, min(n_selectors, world))
+    k_sel = max(1, k // r)
+    k_eff = k_sel * r
+
+    cand = local_topk_candidates(eff, k_sel)          # [k_sel]
+    if world > 1:
+        g = cand
+        for ax in axes:
+            if ax is None:
+                continue
+            n = lax.axis_size(ax)
+            ledger.record("all_gather", ax,
+                          float(g.size * 4) * (n - 1), 0.0, tag)
+            g = lax.all_gather(g, ax, axis=0, tiled=False)
+            g = g.reshape(-1, k_sel)                  # [ranks_so_far, k_sel]
+        # note axes order: gathering over axes[0] first then axes[1] puts
+        # axes[-1] slowest-varying; multi_axis_index uses the same order
+        all_cand = g                                   # [world, k_sel]
+        sel = choose_selectors(key, world, r)          # [r]
+        chosen = all_cand[sel]                         # [r, k_sel]
+    else:
+        chosen = cand[None]
+    idx = jnp.sort(chosen.reshape(-1)[:k_eff])
+    if k_eff < k:
+        idx = jnp.concatenate([idx, jnp.full((k - k_eff,), idx[-1],
+                                             idx.dtype)])
+    # zero all but the LAST occurrence of each duplicate index: the scatter
+    # path is ascending-grid overwrite (last write wins), and scatter-add
+    # agrees because only one slot per index is non-zero.
+    dup = jnp.concatenate([idx[:-1] == idx[1:], jnp.zeros((1,), bool)])
+    weight = jnp.where(dup, 0.0, 1.0).astype(jnp.float32)
+    return idx.astype(jnp.int32), weight

@@ -1,0 +1,63 @@
+"""Bandwidth / compression metrics (paper §IV: GradientCompressionRatio,
+Figs 7-8 network I/O analysis).
+
+All sizes in bytes per device per step unless noted.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+
+def ring_allreduce_bytes(n_bytes: float, n: int) -> float:
+    """Bytes on wire per device for a chunked ring all-reduce."""
+    if n <= 1:
+        return 0.0
+    return 2.0 * (n - 1) / n * n_bytes
+
+
+def iwp_wire_bytes(n_blocks: int, block: int, k: int, n: int,
+                   n_selectors: int, dtype_bytes: int = 4) -> float:
+    """IWP per-device wire bytes: index agreement (allgather of each rank's
+    k/r candidates) + compressed ring all-reduce of the [k, block] payload."""
+    k_sel = max(1, k // max(1, n_selectors))
+    idx_bytes = k_sel * 4 * (n - 1)
+    payload = ring_allreduce_bytes(k * block * dtype_bytes, n)
+    return idx_bytes + payload
+
+
+def dense_wire_bytes(n_blocks: int, block: int, n: int,
+                     dtype_bytes: int = 4) -> float:
+    return ring_allreduce_bytes(n_blocks * block * dtype_bytes, n)
+
+
+def dgc_wire_bytes(n_blocks: int, block: int, k: int, n: int,
+                   dtype_bytes: int = 4) -> float:
+    """DGC on a naive sparse ring: hop h carries the union of h+1 masks.
+    E[union density after h hops] = 1-(1-p)^(h+1), plus 4-byte indices."""
+    p = k / n_blocks
+    total = 0.0
+    for h in range(n - 1):
+        d = 1.0 - (1.0 - p) ** (h + 1)
+        nnz = d * n_blocks
+        total += nnz * (block * dtype_bytes + 4)
+    return total
+
+
+def compression_ratio(dense_bytes: float, compressed_bytes: float) -> float:
+    """Paper §IV-A: size[G] / size[encode(sparse(G))]."""
+    if compressed_bytes <= 0:
+        return math.inf
+    return dense_bytes / compressed_bytes
+
+
+@dataclass(frozen=True)
+class Hardware:
+    """TPU v5e-class constants used by the roofline (per chip)."""
+    peak_flops_bf16: float = 197e12
+    hbm_bw: float = 819e9
+    ici_bw: float = 50e9        # per link
+    hbm_bytes: float = 16e9
+
+
+V5E = Hardware()

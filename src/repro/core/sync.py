@@ -1,0 +1,133 @@
+"""Gradient synchronisation strategies — where the paper plugs into training.
+
+``make_sync`` returns ``(init_state, sync_fn)``:
+
+    sync_fn(grads_tree, params_tree, state, key) -> (synced_tree, state, stats)
+
+called inside the train step's shard_map body, AFTER per-rank grads are
+computed (model-axis collectives already resolved by the TP boundary ops)
+and BEFORE the optimizer.
+
+Strategies:
+  dense_psum  — XLA native all-reduce mean (the non-ring baseline).
+  dense_ring  — explicit chunked ring all-reduce (paper's Fig 7 baseline).
+  iwp_ring    — the paper: shared-mask compressed ring (flat over data+pod).
+  iwp_hier    — FSDP archs: grads arrive reduce-scattered over 'data';
+                IWP ring compresses the inter-pod link only.
+  dgc_ring    — Deep Gradient Compression baseline (densifies; §II).
+
+The synced gradient for compressed strategies is *sparse* (unsent blocks are
+zero — they live in the error-feedback accumulator), matching Algorithm 1:
+``w <- SGD(w, ring_allreduce(G̃))``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compressor, dgc, ledger, ring, tpops
+from repro.core.compressor import IWPConfig
+from repro.core.dgc import DGCConfig
+from repro.core.flatten import FlatSpec, flatten_tree, make_flat_spec, unflatten_tree
+
+
+@dataclass(frozen=True)
+class SyncConfig:
+    strategy: str = "iwp_ring"
+    axes: Tuple[Optional[str], ...] = ("data",)   # DP axes, e.g. ("data","pod")
+    iwp: IWPConfig = field(default_factory=IWPConfig)
+    dgc: DGCConfig = field(default_factory=DGCConfig)
+    compress: bool = True      # False during warm-up (dense sync)
+
+
+def make_sync(cfg: SyncConfig, params_example,
+              stacked=None) -> Tuple[Callable, Callable]:
+    """-> (init_state_fn(params) -> state, sync_fn)."""
+    block = cfg.iwp.block if "iwp" in cfg.strategy else cfg.dgc.block
+    spec = make_flat_spec(params_example, block, stacked)
+
+    def init_state(params):
+        del params
+        if cfg.strategy in ("iwp_ring", "iwp_hier"):
+            return {"acc": compressor.init_acc(spec)}
+        if cfg.strategy == "dgc_ring":
+            return {"acc": dgc.init_acc(spec)}
+        return {}
+
+    def world():
+        return tpops.multi_axis_size(cfg.axes)
+
+    def _dense_psum(grads, params, state, key):
+        n = world()
+        flat = flatten_tree(grads, spec)
+        ledger.record("all_reduce", "+".join(str(a) for a in cfg.axes),
+                      flat.size * 4 * 2 * (n - 1) / max(n, 1), 0.0, "grad_sync")
+        synced = grads
+        for ax in cfg.axes:
+            if ax is not None:
+                synced = jax.tree.map(
+                    lambda x, ax=ax: jax.lax.psum(x, ax), synced)
+        synced = jax.tree.map(lambda x: x / n, synced)
+        return synced, state, {"density": jnp.ones((), jnp.float32)}
+
+    def _dense_ring(grads, params, state, key):
+        flat = flatten_tree(grads, spec)
+        flat = ring.ring_all_reduce_multi(flat, cfg.axes, tag="grad_sync")
+        flat = flat / world()
+        return unflatten_tree(flat, spec), state, {
+            "density": jnp.ones((), jnp.float32)}
+
+    def _iwp(grads, params, state, key):
+        if not cfg.compress:   # warm-up: dense ring, but keep EF state warm
+            g, s, st = _dense_ring(grads, params, state, key)
+            return g, s, st
+        g_flat = flatten_tree(grads, spec)
+        w_flat = flatten_tree(params, spec)
+        payload, idx, weight, new_acc, stats = compressor.compress(
+            state["acc"], g_flat, w_flat, cfg.iwp, spec, key, cfg.axes)
+        payload = ring.ring_all_reduce_multi(payload, cfg.axes,
+                                             tag="iwp_payload")
+        payload = payload / world()
+        synced_flat = compressor.decompress(payload, idx, spec, cfg.iwp)
+        return unflatten_tree(synced_flat, spec), {"acc": new_acc}, stats
+
+    def _iwp_hier(grads, params, state, key):
+        # grads are already summed over 'data' (FSDP reduce-scatter in the
+        # backward); compress only over the remaining (inter-pod) axes.
+        pod_axes = tuple(a for a in cfg.axes if a == "pod")
+        n_data = tpops.multi_axis_size(
+            tuple(a for a in cfg.axes if a != "pod"))
+        if not pod_axes or tpops.multi_axis_size(pod_axes) == 1:
+            # single-pod: nothing left to compress; normalise only
+            synced = jax.tree.map(lambda x: x / max(n_data, 1), grads)
+            return synced, state, {"density": jnp.ones((), jnp.float32)}
+        if not cfg.compress:
+            flat = flatten_tree(grads, spec)
+            flat = ring.ring_all_reduce_multi(flat, pod_axes, tag="grad_sync")
+            flat = flat / world()
+            return unflatten_tree(flat, spec), state, {
+                "density": jnp.ones((), jnp.float32)}
+        g_flat = flatten_tree(grads, spec)
+        w_flat = flatten_tree(params, spec)
+        payload, idx, weight, new_acc, stats = compressor.compress(
+            state["acc"], g_flat, w_flat, cfg.iwp, spec, key, pod_axes)
+        payload = ring.ring_all_reduce_multi(payload, pod_axes,
+                                             tag="iwp_payload")
+        payload = payload / world()
+        synced_flat = compressor.decompress(payload, idx, spec, cfg.iwp)
+        return unflatten_tree(synced_flat, spec), {"acc": new_acc}, stats
+
+    def _dgc(grads, params, state, key):
+        g_flat = flatten_tree(grads, spec)
+        mean_flat, new_acc, stats = dgc.compress_and_reduce(
+            state["acc"], g_flat, cfg.dgc, spec, cfg.axes)
+        return unflatten_tree(mean_flat, spec), {"acc": new_acc}, stats
+
+    table = {"dense_psum": _dense_psum, "dense_ring": _dense_ring,
+             "iwp_ring": _iwp, "iwp_hier": _iwp_hier, "dgc_ring": _dgc}
+    if cfg.strategy not in table:
+        raise ValueError(f"unknown sync strategy {cfg.strategy!r}")
+    return init_state, table[cfg.strategy]

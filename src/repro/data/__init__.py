@@ -1,0 +1,5 @@
+"""Shard-aware synthetic data pipelines (no datasets ship offline; the
+claims under test are compression ratio + convergence parity, DESIGN.md §7).
+"""
+from repro.data.synthetic import (lm_batch_stream, image_batch_stream,
+                                  make_batch_for, teacher_image_stream)

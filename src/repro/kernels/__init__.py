@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the compress path + attention, with jnp oracles.
+
+Layout per repo convention: ``<name>.py`` holds the ``pl.pallas_call`` +
+BlockSpec kernel, ``ops.py`` the jit'd dispatch wrappers, ``ref.py`` the
+pure-jnp oracles.
+"""

@@ -1,0 +1,41 @@
+"""Pallas TPU kernel: gather selected compression blocks into the ring payload.
+
+Uses scalar prefetch: the block index array rides in SMEM and drives the
+input BlockSpec index_map, so the DMA engine streams exactly the selected
+(8,128) tiles HBM->VMEM — the TPU-native replacement for the GPU's
+element-wise sparse gather (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx_ref, src_ref, out_ref):
+    out_ref[...] = src_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def block_gather(acc: jnp.ndarray, idx: jnp.ndarray, *,
+                 interpret: bool = True):
+    """acc [nb, block], idx [k] int32 -> payload [k, block]."""
+    nb, block = acc.shape
+    k = idx.shape[0]
+    sub = block // 128
+    src = acc.reshape(nb, sub, 128)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(k,),
+        in_specs=[pl.BlockSpec((1, sub, 128), lambda i, idx_ref: (idx_ref[i], 0, 0))],
+        out_specs=pl.BlockSpec((1, sub, 128), lambda i, idx_ref: (i, 0, 0)),
+    )
+    out = pl.pallas_call(
+        _kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((k, sub, 128), acc.dtype),
+        interpret=interpret,
+    )(idx, src)
+    return out.reshape(k, block)

@@ -1,0 +1,74 @@
+"""Pallas TPU kernels: scatter the reduced ring payload back to dense, and
+zero the sent blocks out of the residual accumulator.
+
+Both use scalar-prefetch on the *output* BlockSpec. Duplicate indices are
+handled upstream (masks.agree_indices zeroes all but the LAST duplicate
+slot), so ascending-grid overwrite scatter equals scatter-add.
+
+``input_output_aliases`` provides the base buffer (zeros for scatter, the
+accumulator for zeroing) so untouched blocks keep their contents.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _write_kernel(idx_ref, base_ref, payload_ref, out_ref):
+    del base_ref
+    out_ref[...] = payload_ref[...]
+
+
+def _zero_kernel(idx_ref, acc_ref, out_ref):
+    del acc_ref
+    out_ref[...] = jnp.zeros_like(out_ref)
+
+
+@functools.partial(jax.jit, static_argnames=("n_blocks", "interpret"))
+def block_scatter(payload: jnp.ndarray, idx: jnp.ndarray, n_blocks: int, *,
+                  interpret: bool = True):
+    """payload [k, block], idx [k] -> dense [n_blocks, block] (zeros elsewhere)."""
+    k, block = payload.shape
+    sub = block // 128
+    base = jnp.zeros((n_blocks, sub, 128), payload.dtype)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(k,),
+        in_specs=[pl.BlockSpec((1, sub, 128),
+                               lambda i, idx_ref: (idx_ref[i], 0, 0)),
+                  pl.BlockSpec((1, sub, 128), lambda i, idx_ref: (i, 0, 0))],
+        out_specs=pl.BlockSpec((1, sub, 128), lambda i, idx_ref: (idx_ref[i], 0, 0)),
+    )
+    out = pl.pallas_call(
+        _write_kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_blocks, sub, 128), payload.dtype),
+        input_output_aliases={1: 0},     # base (first non-prefetch arg) -> out
+        interpret=interpret,
+    )(idx, base, payload.reshape(k, sub, 128))
+    return out.reshape(n_blocks, block)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def block_zero(acc: jnp.ndarray, idx: jnp.ndarray, *, interpret: bool = True):
+    """Zero blocks at ``idx`` in-place-style (aliased)."""
+    nb, block = acc.shape
+    k = idx.shape[0]
+    sub = block // 128
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(k,),
+        in_specs=[pl.BlockSpec((1, sub, 128),
+                               lambda i, idx_ref: (idx_ref[i], 0, 0))],
+        out_specs=pl.BlockSpec((1, sub, 128), lambda i, idx_ref: (idx_ref[i], 0, 0)),
+    )
+    out = pl.pallas_call(
+        _zero_kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((nb, sub, 128), acc.dtype),
+        input_output_aliases={1: 0},     # acc -> out
+        interpret=interpret,
+    )(idx, acc.reshape(nb, sub, 128))
+    return out.reshape(nb, block)

@@ -1,0 +1,112 @@
+"""Pallas TPU kernel: blocked causal attention with online softmax
+(FlashAttention re-derived for TPU: MXU-aligned 128-multiple tiles, f32
+accumulators in VMEM scratch, grid (batch*heads, q_blocks, kv_blocks) with
+the kv dimension innermost so the output tile is revisited and finalised
+once).
+
+Supports GQA (kv head picked in the BlockSpec index_map — no materialised
+repeat) and sliding-window masking (for the long-context variants).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, window: int, bq: int, bk: int,
+            nk: int, sq: int, sk: int, sk_valid: int):
+    ik = pl.program_id(2)
+    iq = pl.program_id(1)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                     # [bq, d]
+    k = k_ref[0, 0].astype(jnp.float32)                  # [bk, d]
+    v = v_ref[0, 0].astype(jnp.float32)                  # [bk, d]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) \
+        + (sk - sq)                                      # align sequence ends
+    kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = kpos < sk_valid                               # padded keys
+    if causal or window > 0:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                                  # [bq]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(mask, p, 0.0)
+    l_scr[...] = alpha * l_scr[...] + p.sum(axis=-1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _fin():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "block_q", "block_k", "interpret", "softmax_scale"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softmax_scale: float | None = None, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = True):
+    """q [B, H, Sq, D]; k, v [B, Hkv, Sk, D] -> [B, H, Sq, D]."""
+    b, h, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    rep = h // hkv
+    scale = softmax_scale if softmax_scale is not None else d ** -0.5
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    # pad sequence dims to block multiples
+    psq, psk = (-sq) % bq, (-sk) % bk
+    if psq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, psq), (0, 0)))
+    if psk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, psk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, psk), (0, 0)))
+    sqp, skp = sq + psq, sk + psk
+    nq, nk = sqp // bq, skp // bk
+
+    qr = q.reshape(b * h, sqp, d)
+    kern = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        bq=bq, bk=bk, nk=nk, sq=sq, sk=sk, sk_valid=sk)
+    out = pl.pallas_call(
+        kern,
+        grid=(b * h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bh, i, j, H=h, R=rep: (bh // H, (bh % H) // R, j, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bh, i, j, H=h, R=rep: (bh // H, (bh % H) // R, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bh, i, j: (bh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sqp, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, k, v)
+    return out.reshape(b, h, sqp, d)[:, :, :sq]

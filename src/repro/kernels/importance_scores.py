@@ -1,0 +1,48 @@
+"""Pallas TPU kernel: per-block gradient importance (mean |g/w|).
+
+The compress path reads the whole accumulated gradient once per step; this
+kernel fuses abs/div/mean into one VMEM pass. Blocks are 1024 elements,
+viewed as (8, 128) VPU tiles; each grid step processes ``ROWS`` compression
+blocks = a (ROWS*8, 128) VMEM tile per operand.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROWS = 8          # compression blocks per grid step
+EPS = 1e-8
+
+
+def _kernel(g_ref, w_ref, o_ref, *, block: int, eps: float):
+    g = g_ref[...].astype(jnp.float32)            # [ROWS, block]
+    w = w_ref[...].astype(jnp.float32)
+    imp = jnp.abs(g) / (jnp.abs(w) + eps)
+    o_ref[...] = imp.mean(axis=-1)                # [ROWS]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "eps"))
+def importance_scores(g_blocks: jnp.ndarray, w_blocks: jnp.ndarray,
+                      *, eps: float = EPS, interpret: bool = True):
+    """[nb, block] x2 -> [nb] float32. nb is padded to a ROWS multiple."""
+    nb, block = g_blocks.shape
+    pad = (-nb) % ROWS
+    if pad:
+        zg = jnp.zeros((pad, block), g_blocks.dtype)
+        ow = jnp.ones((pad, block), w_blocks.dtype)
+        g_blocks = jnp.concatenate([g_blocks, zg])
+        w_blocks = jnp.concatenate([w_blocks, ow])
+    n = g_blocks.shape[0]
+    out = pl.pallas_call(
+        functools.partial(_kernel, block=block, eps=eps),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        grid=(n // ROWS,),
+        in_specs=[pl.BlockSpec((ROWS, block), lambda i: (i, 0)),
+                  pl.BlockSpec((ROWS, block), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((ROWS,), lambda i: (i,)),
+        interpret=interpret,
+    )(g_blocks, w_blocks)
+    return out[:nb]

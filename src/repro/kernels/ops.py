@@ -1,0 +1,75 @@
+"""Jit'd dispatch wrappers over the Pallas kernels with pure-jnp fallbacks.
+
+``use_pallas=False`` (the CPU default) routes to the ``ref.py`` oracles;
+``use_pallas=True`` invokes the Pallas kernels — in ``interpret`` mode when
+the backend is CPU (kernel-correctness validation), compiled on TPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels import importance_scores as _imp
+from repro.kernels import residual_update as _res
+from repro.kernels import block_gather as _bg
+from repro.kernels import block_scatter as _bs
+from repro.kernels import flash_attention as _fa
+from repro.kernels import fused_ef_importance as _fei
+
+
+def _interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def block_importance(g_blocks, w_blocks, *, use_pallas: bool = False):
+    if use_pallas:
+        return _imp.importance_scores(g_blocks, w_blocks,
+                                      interpret=_interpret())
+    return ref.block_importance(g_blocks, w_blocks)
+
+
+def residual_update(acc, g, m: float, *, use_pallas: bool = False):
+    if use_pallas:
+        return _res.residual_update(acc, g, m=m, interpret=_interpret())
+    return ref.residual_update(acc, g, m)
+
+
+def accum_and_scores(acc, g, w, m: float, *, use_pallas: bool = False):
+    """Fused Eq.3 accumulation + block importance (one HBM pass)."""
+    if use_pallas:
+        return _fei.fused_ef_importance(acc, g, w, m=m,
+                                        interpret=_interpret())
+    new_acc = ref.residual_update(acc, g, m)
+    return new_acc, ref.block_importance(new_acc, w)
+
+
+def block_gather(acc, idx, *, use_pallas: bool = False):
+    if use_pallas:
+        return _bg.block_gather(acc, idx, interpret=_interpret())
+    return ref.block_gather(acc, idx)
+
+
+def block_scatter(payload, idx, n_blocks: int, *, use_pallas: bool = False):
+    if use_pallas:
+        return _bs.block_scatter(payload, idx, n_blocks,
+                                 interpret=_interpret())
+    return ref.block_scatter(payload, idx, n_blocks)
+
+
+def block_zero(acc, idx, *, use_pallas: bool = False):
+    if use_pallas:
+        return _bs.block_zero(acc, idx, interpret=_interpret())
+    return ref.block_zero(acc, idx)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softmax_scale=None, use_pallas: bool = False,
+                    block_q: int = 128, block_k: int = 128):
+    if use_pallas:
+        return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                                   softmax_scale=softmax_scale,
+                                   block_q=block_q, block_k=block_k,
+                                   interpret=_interpret())
+    return ref.flash_attention(q, k, v, causal=causal, window=window,
+                               softmax_scale=softmax_scale)

@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness reference).
+
+Tests sweep shapes/dtypes and assert_allclose kernel-vs-ref; ``ops.py``
+falls back to these when ``use_pallas=False`` (the default on CPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-8
+
+
+def block_importance(g_blocks, w_blocks, eps: float = EPS):
+    """[nb, block] x2 -> [nb] mean |g/w| per block (float32)."""
+    g = g_blocks.astype(jnp.float32)
+    w = w_blocks.astype(jnp.float32)
+    return (jnp.abs(g) / (jnp.abs(w) + eps)).mean(axis=-1)
+
+
+def residual_update(acc, g, m: float):
+    """Error-feedback update acc' = m*acc + g (Eq. 3 momentum correction)."""
+    return (m * acc.astype(jnp.float32) + g.astype(jnp.float32)).astype(acc.dtype)
+
+
+def block_gather(acc, idx):
+    """[nb, block], [k] -> [k, block]."""
+    return jnp.take(jnp.asarray(acc), jnp.asarray(idx), axis=0)
+
+
+def block_scatter(payload, idx, n_blocks: int):
+    """Scatter payload rows into a zero [nb, block]; duplicate idx slots must
+    carry zero payload except the last occurrence (masks.agree_indices
+    guarantees this), so add and overwrite-last agree."""
+    payload = jnp.asarray(payload)
+    out = jnp.zeros((n_blocks, payload.shape[1]), payload.dtype)
+    return out.at[jnp.asarray(idx)].add(payload)
+
+
+def block_zero(acc, idx):
+    """Zero the selected blocks (residual: local accumulation keeps the rest)."""
+    return jnp.asarray(acc).at[jnp.asarray(idx)].set(0.0)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softmax_scale: float | None = None):
+    """Reference attention. [B, H, Sq, D], [B, Hkv, Sk, D] -> [B, H, Sq, D].
+
+    Materialises the score matrix — small validation shapes only.
+    ``window > 0``: sliding window (each query attends to keys in
+    (pos-window, pos]); implies causal.
+    """
+    b, h, sq, d = q.shape
+    hkv = k.shape[1]
+    rep = h // hkv
+    scale = softmax_scale if softmax_scale is not None else d ** -0.5
+    kk = jnp.repeat(k, rep, axis=1)
+    vv = jnp.repeat(v, rep, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * scale
+    sk = k.shape[2]
+    qpos = jnp.arange(sq)[:, None] + (sk - sq)   # align ends (decode-friendly)
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal or window > 0:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)          # fully-masked rows
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32)).astype(q.dtype)

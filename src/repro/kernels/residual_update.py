@@ -1,0 +1,41 @@
+"""Pallas TPU kernel: fused error-feedback accumulation (Eq. 3).
+
+acc' = m * acc + g over the whole flat gradient — a pure streaming pass;
+fusing keeps it at one read + one write of HBM per operand.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROWS = 8
+
+
+def _kernel(acc_ref, g_ref, o_ref, *, m: float):
+    a = acc_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    o_ref[...] = (m * a + g).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "interpret"))
+def residual_update(acc: jnp.ndarray, g: jnp.ndarray, *, m: float,
+                    interpret: bool = True):
+    nb, block = acc.shape
+    pad = (-nb) % ROWS
+    if pad:
+        acc = jnp.concatenate([acc, jnp.zeros((pad, block), acc.dtype)])
+        g = jnp.concatenate([g, jnp.zeros((pad, block), g.dtype)])
+    n = acc.shape[0]
+    out = pl.pallas_call(
+        functools.partial(_kernel, m=m),
+        out_shape=jax.ShapeDtypeStruct((n, block), acc.dtype),
+        grid=(n // ROWS,),
+        in_specs=[pl.BlockSpec((ROWS, block), lambda i: (i, 0)),
+                  pl.BlockSpec((ROWS, block), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((ROWS, block), lambda i: (i, 0)),
+        interpret=interpret,
+    )(acc, g)
+    return out[:nb]

@@ -1,0 +1,1 @@
+"""Launch layer: production mesh, shard_map'd train/serve steps, dry-run."""

@@ -1,0 +1,315 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) combination
+on the production meshes, record memory/cost analyses + the collective
+ledger, and derive the roofline terms.
+
+MUST be run as its own process (device count locks at first jax init):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-0.5b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Results: one JSON per combination under experiments/dryrun/.
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_arch, shape_supported
+from repro.core import ledger as ledger_mod
+from repro.core.metrics import V5E
+from repro.launch.mesh import make_production_mesh
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing (static cross-check for the ledger)
+# ---------------------------------------------------------------------------
+
+_COLL_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[^\n]*?\(([^)]*)\)")
+_SHAPE_RE = re.compile(r"(bf16|f32|f16|s32|u32|s8|u8|pred|f64|s64)"
+                       r"\[([\d,]*)\]")
+_BYTES = {"bf16": 2, "f16": 2, "f32": 4, "s32": 4, "u32": 4, "s8": 1,
+          "u8": 1, "pred": 1, "f64": 8, "s64": 8}
+
+
+def hlo_collective_bytes(txt: str) -> dict:
+    out: dict = {}
+    for m in _COLL_RE.finditer(txt):
+        op = m.group(1)
+        b = 0
+        for sm in _SHAPE_RE.finditer(m.group(2)):
+            dims = sm.group(2)
+            n = int(np.prod([int(x) for x in dims.split(",") if x])) \
+                if dims else 1
+            b += n * _BYTES[sm.group(1)]
+        out[op] = out.get(op, 0) + b
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# model flops (6*N_active*D)
+# ---------------------------------------------------------------------------
+
+def count_params(structs) -> dict:
+    """-> {total, active, embed} param counts from ShapeDtypeStructs."""
+    total = active = embed = 0
+    flat = jax.tree_util.tree_flatten_with_path(structs)[0]
+    for path, leaf in flat:
+        n = int(np.prod(leaf.shape))
+        name = "/".join(str(getattr(p, "key", p)) for p in path)
+        total += n
+        if "wemb" in name or "unembed" in name:
+            embed += n
+        elif "we_up" in name or "we_gate" in name or "we_down" in name:
+            active += 0   # handled below (fractional)
+        else:
+            active += n
+    return {"total": total, "embed": embed, "dense_nonembed": active}
+
+
+def model_flops(cfg, structs, shape) -> float:
+    c = count_params(structs)
+    expert = 0
+    flat = jax.tree_util.tree_flatten_with_path(structs)[0]
+    for path, leaf in flat:
+        name = "/".join(str(getattr(p, "key", p)) for p in path)
+        if "we_up" in name or "we_gate" in name or "we_down" in name:
+            expert += int(np.prod(leaf.shape))
+    n_active = c["dense_nonembed"]      # already excludes embed/unembed
+    if cfg.moe is not None and expert:
+        n_active += expert * cfg.moe.top_k / cfg.moe.n_experts
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active * tokens
+
+
+# ---------------------------------------------------------------------------
+# build + lower one combination
+# ---------------------------------------------------------------------------
+
+def run_one(arch: str, shape_name: str, mesh_kind: str,
+            out_dir: str = OUT_DIR, quiet: bool = False,
+            variant: str = "", train_kwargs: dict | None = None,
+            serve_kwargs: dict | None = None) -> dict:
+    from repro.launch.train import build_train
+    from repro.launch.serve import build_serve
+
+    cfg = get_arch(arch)
+    shape = INPUT_SHAPES[shape_name]
+    ok, why = shape_supported(cfg, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "status": "skipped", "reason": why}
+
+    multi = mesh_kind == "multipod"
+    mesh = make_production_mesh(multi_pod=multi)
+    chips = int(np.prod(mesh.devices.shape))
+    led = ledger_mod.Ledger()
+    t0 = time.time()
+
+    with jax.set_mesh(mesh), ledger_mod.use(led):
+        if shape.kind == "train":
+            tb = build_train(cfg, mesh, shape, **(train_kwargs or {}))
+            lowered = tb.step_fn.lower(
+                tb.state_structs, tb.batch_structs,
+                jax.ShapeDtypeStruct((2,), jnp.uint32))
+            param_structs = tb.pset.params
+            include_bwd = True
+        else:
+            sb = build_serve(cfg, mesh, shape, **(serve_kwargs or {}))
+            param_structs = sb.param_structs
+            include_bwd = False
+            if shape.kind == "decode":
+                tok = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+                lowered = sb.decode_fn.lower(param_structs, sb.cache_structs,
+                                             tok)
+            else:
+                lowered = sb.prefill_fn.lower(param_structs, sb.batch_structs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    cost = compiled.cost_analysis()
+    mem = compiled.memory_analysis()
+    txt = compiled.as_text()
+    hlo_coll = hlo_collective_bytes(txt)
+    led_tot = led.totals(include_bwd)
+    led_axis = led.by_axis(include_bwd)
+
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    coll_dev = float(led_tot.get("total", 0.0))
+    mf = model_flops(cfg, param_structs, shape)
+
+    # NOTE: XLA cost_analysis counts scan bodies ONCE (static); these terms
+    # are a floor. The dynamic terms below (analytic matmul/attention walk +
+    # ledger collectives) are what §Roofline reports.
+    compute_term = flops_dev / V5E.peak_flops_bf16
+    memory_term = bytes_dev / V5E.hbm_bw
+    collective_term = coll_dev / V5E.ici_bw
+    terms = {"compute": compute_term, "memory": memory_term,
+             "collective": collective_term}
+    dominant = max(terms, key=terms.get)
+
+    from repro.launch import sharding as _sh
+    from repro.launch.roofline import dynamic_terms
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    use_tp = (train_kwargs or {}).get("use_tp", True) is not False
+    tp_eff = sizes.get("model", 1) if use_tp else 1
+    dp_world_eff = chips // tp_eff
+    # tp-only local shapes: FSDP-stored shards are all-gathered for compute,
+    # so per-device flops (and weight traffic) see the data-unsharded layer.
+    sizes_tp = {"model": sizes.get("model", 1)} if use_tp else {}
+    if shape.kind == "train":
+        mb_eff = tb.microbatches
+        # FSDP shards are gathered for compute: tp-only local shapes
+        local_structs = _sh.local_param_structs(tb.pset.params,
+                                                tb.pset.specs, sizes_tp)
+    else:
+        mb_eff = 1
+        # serving weights are resident: true stored local shapes
+        local_structs = _sh.local_param_structs(sb.pset.params,
+                                                sb.pset.specs, sizes)
+    dyn = dynamic_terms(cfg, local_structs, shape, dp_world=dp_world_eff,
+                        tp=tp_eff, mb=mb_eff, collective_bytes_dev=coll_dev,
+                        mla_cache_tp=(serve_kwargs or {}).get(
+                            "mla_cache_tp", False) is True)
+
+    row = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "variant": variant, "status": "ok", "chips": chips,
+        "train_kwargs": {k: str(v) for k, v in (train_kwargs or {}).items()},
+        "serve_kwargs": {k: str(v) for k, v in (serve_kwargs or {}).items()},
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "flops_per_device": flops_dev,
+        "bytes_per_device": bytes_dev,
+        "collective_bytes_per_device": coll_dev,
+        "collective_by_axis": {str(k): v for k, v in led_axis.items()},
+        "collective_by_tag": {str(k): v
+                              for k, v in led.by_tag(include_bwd).items()},
+        "hlo_collective_bytes_static": hlo_coll,
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_estimate": mem.argument_size_in_bytes
+                             + mem.temp_size_in_bytes,
+        },
+        "hbm_budget": V5E.hbm_bytes,
+        "fits_hbm": (mem.argument_size_in_bytes + mem.temp_size_in_bytes)
+                    < V5E.hbm_bytes,
+        "roofline_terms_static_s": terms,
+        "dominant_static": dominant,
+        "roofline_terms_s": dyn["roofline_terms_dyn_s"],
+        "dominant": dyn["dominant_dyn"],
+        "flops_dyn_per_device": dyn["flops_dyn_per_device"],
+        "bytes_dyn_per_device": dyn["bytes_dyn_per_device"],
+        "model_flops_global": mf,
+        "useful_flops_ratio": (mf / (dyn["flops_dyn_per_device"] * chips)
+                               if dyn["flops_dyn_per_device"] else 0.0),
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = f"__{variant}" if variant else ""
+    fn = os.path.join(out_dir,
+                      f"{arch}__{shape_name}__{mesh_kind}{suffix}.json")
+    with open(fn, "w") as f:
+        json.dump(row, f, indent=1)
+    if not quiet:
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_kind}: OK "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s, "
+              f"dominant={dominant}, "
+              f"args/dev={mem.argument_size_in_bytes/1e9:.2f}GB, "
+              f"temp/dev={mem.temp_size_in_bytes/1e9:.2f}GB)")
+        print(f"  memory_analysis: {mem}")
+        print(f"  cost_analysis: flops={flops_dev:.3e} "
+              f"bytes={bytes_dev:.3e}")
+        print(f"  roofline terms (s): " +
+              ", ".join(f"{k}={v*1e3:.3f}ms" for k, v in terms.items()))
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=OUT_DIR)
+    ap.add_argument("--variant", default="",
+                    help="suffix for the result json (perf iterations)")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--no-tp", action="store_true",
+                    help="replicate params over the model axis (small archs)")
+    ap.add_argument("--seq-parallel", action="store_true",
+                    help="Megatron-SP: seq-sharded residual stream")
+    ap.add_argument("--no-compress", action="store_true",
+                    help="disable IWP compression (dense sync ablation)")
+    ap.add_argument("--sync", dest="sync_strategy", default=None)
+    ap.add_argument("--ep-over-data", action="store_true",
+                    help="serving: shard MoE experts over the data axis")
+    ap.add_argument("--mla-cache-tp", action="store_true",
+                    help="serving: shard the MLA latent cache over model")
+    args = ap.parse_args()
+    train_kwargs = {}
+    if args.microbatches is not None:
+        train_kwargs["microbatches"] = args.microbatches
+    if args.no_tp:
+        train_kwargs["use_tp"] = False
+    if args.seq_parallel:
+        train_kwargs["seq_parallel"] = True
+    if args.no_compress:
+        train_kwargs["compress"] = False
+    if args.sync_strategy:
+        train_kwargs["sync_strategy"] = args.sync_strategy
+    serve_kwargs = {}
+    if args.ep_over_data:
+        serve_kwargs["ep_over_data"] = True
+    if args.mla_cache_tp:
+        serve_kwargs["mla_cache_tp"] = True
+
+    meshes = ["single", "multipod"] if args.mesh == "both" else [args.mesh]
+    combos = []
+    archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or args.shape is None) \
+        else [args.shape]
+    for m in meshes:
+        for a in archs:
+            for s in shapes:
+                combos.append((a, s, m))
+
+    failures = 0
+    for a, s, m in combos:
+        try:
+            row = run_one(a, s, m, out_dir=args.out, variant=args.variant,
+                          train_kwargs=train_kwargs,
+                          serve_kwargs=serve_kwargs)
+            if row["status"] == "skipped":
+                print(f"[dryrun] {a} x {s} x {m}: SKIP ({row['reason']})")
+        except Exception as e:
+            failures += 1
+            print(f"[dryrun] {a} x {s} x {m}: FAIL {type(e).__name__}: {e}")
+            traceback.print_exc()
+    print(f"[dryrun] done, {failures} failures / {len(combos)} combos")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Production mesh builders (functions, not module constants — importing
+this module never touches jax device state)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_sim_mesh(dp: int = 4, tp: int = 2, pods: int = 1):
+    """Small host-device mesh for tests/examples (needs
+    XLA_FLAGS=--xla_force_host_platform_device_count=<dp*tp*pods>)."""
+    if pods > 1:
+        return jax.make_mesh((pods, dp, tp), ("pod", "data", "model"))
+    return jax.make_mesh((dp, tp), ("data", "model"))
+
+
+def mesh_axes(mesh) -> dict:
+    names = mesh.axis_names
+    return {
+        "tp": "model" if "model" in names else None,
+        "dp": "data" if "data" in names else None,
+        "pod": "pod" if "pod" in names else None,
+        "tp_size": dict(zip(names, mesh.devices.shape)).get("model", 1),
+        "dp_size": dict(zip(names, mesh.devices.shape)).get("data", 1),
+        "pod_size": dict(zip(names, mesh.devices.shape)).get("pod", 1),
+    }

@@ -1,0 +1,257 @@
+"""Serve-step factory: prefill (no-cache forward -> next token) and decode
+(single token against a KV cache) as fully-manual shard_map programs.
+
+Cache layout per layer kind (see DESIGN.md skip matrix):
+  full/nope_full  — [B, kv, S, hd], batch over dp, kv heads over model;
+                    for long_500k the nope_full cache is sequence-sharded
+                    over 'data' (context-parallel decode).
+  local/chunked   — ring buffer of size window/chunk ("pos" entry).
+  full + long_context_window (llama3.2 variant) — ring buffer of window.
+  MLA             — shared latent [B, S, lora+rope] (no head dim).
+  rwkv/recurrent  — O(1) recurrence state.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import tpops
+from repro.launch import sharding as sh
+from repro.launch.train import eval_shape_pset
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.common import Dist
+
+
+@dataclass
+class ServeBuild:
+    decode_fn: Optional[Callable]      # (params, caches, tokens...) jitted
+    prefill_fn: Optional[Callable]
+    state_specs: Any                   # params specs
+    param_structs: Any
+    cache_structs: Any
+    cache_specs: Any
+    batch_structs: Any
+    batch_specs: Any
+    dist: Dist
+    pset: Any
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def _layer_cache_struct(cfg, dist: Dist, kind: str, shape_name: str,
+                        seq_len: int, batch: int, dp_ax,
+                        cache_dtype=jnp.bfloat16):
+    """-> (struct_tree, spec_tree) for one layer's cache (GLOBAL shapes)."""
+    tp = dist.tp_size
+    long = shape_name == "long_500k"
+    if kind == "rwkv":
+        hl = -(-cfg.n_heads // tp)
+        hs = cfg.rwkv.head_size
+        st = {"tm": {"x_prev": _sds((batch, cfg.d_model), cache_dtype),
+                     "s": _sds((batch, hl * tp, hs, hs), cache_dtype)},
+              "cm": {"x_prev": _sds((batch, cfg.d_model), cache_dtype)}}
+        sp = {"tm": {"x_prev": P(dp_ax, None),
+                     "s": P(dp_ax, "model", None, None)},
+              "cm": {"x_prev": P(dp_ax, None)}}
+        return st, sp
+    if kind == "recurrent":
+        w = cfg.rglru.lru_width or cfg.d_model
+        cw = cfg.rglru.conv1d_width
+        st = {"h": _sds((batch, w), cache_dtype),
+              "conv": _sds((batch, cw - 1, w), cache_dtype)}
+        sp = {"h": P(dp_ax, "model"), "conv": P(dp_ax, None, "model")}
+        return st, sp
+    if cfg.mla is not None:
+        m = cfg.mla
+        st = {"lat": _sds((batch, seq_len, m.kv_lora_rank + m.rope_head_dim),
+                          cache_dtype),
+              "t": _sds((), jnp.int32)}
+        sp = {"lat": P(dp_ax, None, None), "t": P()}
+        if dist.mla_cache_tp:
+            # latent cache S-sharded over the model axis (context-parallel
+            # decode, distributed softmax combine in mla_apply)
+            sp["lat"] = P(dp_ax, "model", None)
+            st["seqshard_tp"] = _sds((0,), jnp.int32)
+            sp["seqshard_tp"] = P(None)
+        return st, sp
+
+    # GQA attention caches
+    lo = L.gqa_layout(cfg, tp)
+    kv_g = lo.kv_local * tp if cfg.n_kv_heads < tp else cfg.n_kv_heads
+    ring = False
+    seq_sharded = False
+    cap = seq_len
+    if kind == "local":
+        cap, ring = min(cfg.window, seq_len), True
+    elif kind == "chunked":
+        cap, ring = min(cfg.chunk, seq_len), True
+    elif long and cfg.long_context_window:
+        cap, ring = cfg.long_context_window, True
+    elif long and kind in ("full", "nope_full"):
+        seq_sharded = True
+    st = {"k": _sds((batch, kv_g, cap, cfg.head_dim), cache_dtype),
+          "v": _sds((batch, kv_g, cap, cfg.head_dim), cache_dtype),
+          "t": _sds((), jnp.int32)}
+    seq_ax = "data" if seq_sharded else None
+    sp = {"k": P(dp_ax, "model", seq_ax, None),
+          "v": P(dp_ax, "model", seq_ax, None),
+          "t": P()}
+    if ring:
+        st["pos"] = _sds((cap,), jnp.int32)
+        sp["pos"] = P(None)
+    if seq_sharded:
+        st["seqshard"] = _sds((0,), jnp.int32)
+        sp["seqshard"] = P(None)
+    return st, sp
+
+
+def cache_structs(cfg, dist: Dist, shape, mesh, cache_dtype=jnp.bfloat16):
+    """Full-model cache pytree (structs, specs) matching forward()'s layout."""
+    kinds = cfg.layer_kinds()
+    pro, stk, epi = T.layer_plan(cfg)
+    period = T._period(cfg)
+    g = len(stk) // period
+    b = shape.global_batch
+    dp_world = dist.dp_size * dist.pod_size
+    replicate_b = b % dp_world != 0
+    dp_ax = None if replicate_b else sh.dp_axes_spec(dist)
+
+    structs: Dict[str, Any] = {}
+    specs: Dict[str, Any] = {}
+    for tag, idxs in (("prologue", pro), ("epilogue", epi)):
+        structs[tag] = {}
+        specs[tag] = {}
+        for j, i in enumerate(idxs):
+            st, sp = _layer_cache_struct(cfg, dist, kinds[i], shape.name,
+                                         shape.seq_len, b, dp_ax, cache_dtype)
+            structs[tag][str(j)] = st
+            specs[tag][str(j)] = sp
+
+    def stack_struct(s):
+        return jax.ShapeDtypeStruct((g,) + s.shape, s.dtype)
+
+    def stack_spec(sp):
+        return P(*([None] + list(sp)))
+
+    blk_st, blk_sp = [], []
+    for p_ in range(period):
+        st, sp = _layer_cache_struct(cfg, dist, kinds[stk[p_]], shape.name,
+                                     shape.seq_len, b, dp_ax, cache_dtype)
+        blk_st.append(jax.tree.map(stack_struct, st,
+                                   is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)))
+        blk_sp.append(jax.tree.map(stack_spec, sp,
+                                   is_leaf=lambda x: isinstance(x, P)))
+    structs["blocks"] = tuple(blk_st)
+    specs["blocks"] = tuple(blk_sp)
+    return structs, specs, replicate_b
+
+
+def init_caches(cfg, dist: Dist, shape, mesh, cache_dtype=jnp.bfloat16):
+    """Concrete zero caches (small scale / examples)."""
+    structs, specs, _ = cache_structs(cfg, dist, shape, mesh, cache_dtype)
+
+    def z(s):
+        if s.dtype == jnp.int32 and s.shape == ():
+            return jnp.zeros((), jnp.int32)
+        if s.shape and s.shape[-1:] == (0,):
+            return jnp.zeros(s.shape, s.dtype)
+        base = jnp.zeros(s.shape, s.dtype)
+        return base
+    caches = jax.tree.map(z, structs,
+                          is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    # ring-buffer position arrays start at -1
+    def fix_pos(path_c):
+        return path_c
+    def walk(c):
+        if isinstance(c, dict):
+            out = {k: walk(v) for k, v in c.items()}
+            if "pos" in out:
+                out["pos"] = jnp.full(out["pos"].shape, -1, jnp.int32)
+            return out
+        if isinstance(c, tuple):
+            return tuple(walk(v) for v in c)
+        return c
+    return walk(caches), specs
+
+
+def build_serve(cfg, mesh, shape, *, param_dtype=jnp.bfloat16,
+                compute_dtype=jnp.bfloat16, cache_dtype=jnp.bfloat16,
+                ep_over_data: bool = False,
+                mla_cache_tp: bool = False) -> ServeBuild:
+    import dataclasses as _dc
+    seq_sharded = shape.name == "long_500k"
+    # serving keeps params resident (no FSDP gather per token); capacity
+    # consequences for the >100B archs are reported by the dry-run and
+    # addressed in EXPERIMENTS.md §Perf (expert-data-sharding).
+    dist = sh.make_dist(cfg, mesh, param_dtype=param_dtype,
+                        compute_dtype=compute_dtype, seq_sharded=seq_sharded,
+                        fsdp=False)
+    if ep_over_data or mla_cache_tp:
+        dist = _dc.replace(dist, ep_over_data=ep_over_data,
+                           mla_cache_tp=mla_cache_tp and cfg.mla is not None)
+    pset = eval_shape_pset(cfg, dist)
+    b = shape.global_batch
+    dp_world = dist.dp_size * dist.pod_size
+    replicate_b = b % dp_world != 0
+    dp_ax = None if replicate_b else sh.dp_axes_spec(dist)
+
+    c_structs, c_specs, _ = cache_structs(cfg, dist, shape, mesh, cache_dtype)
+
+    # ---- decode ----
+    decode_fn = None
+    if cfg.supports_decode:
+        tok_struct = _sds((b, 1), jnp.int32)
+        tok_spec = P(dp_ax, None)
+
+        def decode_body(params, caches, tokens):
+            x, _, new_caches = T.forward(cfg, dist, params,
+                                         {"tokens": tokens}, caches=caches)
+            logits = T.unembed_logits(cfg, dist, params, x[:, -1:])
+            nxt = L.sharded_argmax(cfg, dist, logits[:, 0])
+            return nxt, new_caches
+
+        smapped = jax.shard_map(
+            decode_body, mesh=mesh,
+            in_specs=(pset.specs, c_specs, tok_spec),
+            out_specs=(P(dp_ax), c_specs),
+            check_vma=False)
+        decode_fn = jax.jit(smapped, donate_argnums=(1,))
+
+    # ---- prefill ----
+    if cfg.frontend == "audio":
+        batch_structs = {"frames": _sds((b, shape.seq_len, 512), jnp.float32),
+                         "mask": _sds((b, shape.seq_len), jnp.bool_)}
+    elif cfg.frontend == "vision":
+        p_ = cfg.n_prefix_tokens
+        batch_structs = {"patch_embeds": _sds((b, p_, 1024), jnp.float32),
+                         "tokens": _sds((b, shape.seq_len - p_), jnp.int32)}
+    else:
+        batch_structs = {"tokens": _sds((b, shape.seq_len), jnp.int32)}
+    batch_specs = sh.batch_spec_tree(cfg, dist, batch_structs,
+                                     replicate_batch=replicate_b)
+
+    def prefill_body(params, batch):
+        x, _, _ = T.forward(cfg, dist, params, batch)
+        logits = T.unembed_logits(cfg, dist, params, x[:, -1:])
+        return L.sharded_argmax(cfg, dist, logits[:, 0])
+
+    smapped_p = jax.shard_map(
+        prefill_body, mesh=mesh,
+        in_specs=(pset.specs, batch_specs),
+        out_specs=P(dp_ax),
+        check_vma=False)
+    prefill_fn = jax.jit(smapped_p)
+
+    return ServeBuild(decode_fn=decode_fn, prefill_fn=prefill_fn,
+                      state_specs=pset.specs, param_structs=pset.params,
+                      cache_structs=c_structs, cache_specs=c_specs,
+                      batch_structs=batch_structs, batch_specs=batch_specs,
+                      dist=dist, pset=pset)

@@ -1,0 +1,146 @@
+"""Sharding utilities: Dist construction, local-shape math, batch specs,
+kv-duplicate gradient reduction."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import Dist
+
+
+def make_dist(cfg, mesh, *, param_dtype=jnp.bfloat16,
+              compute_dtype=jnp.bfloat16, seq_sharded: bool = False,
+              fsdp: Optional[bool] = None, use_tp: bool = True) -> Dist:
+    """``use_tp=False``: replicate params over the model axis and treat it
+    as extra data parallelism (the right call for sub-1B models where TP
+    activation all-reduces dominate — see EXPERIMENTS.md §Perf)."""
+    names = mesh.axis_names
+    sizes = dict(zip(names, mesh.devices.shape))
+    if not use_tp:
+        return Dist(
+            tp=None, dp="data" if "data" in names else None,
+            pod="pod" if "pod" in names else None,
+            tp_size=1,
+            dp_size=sizes.get("data", 1),
+            pod_size=sizes.get("pod", 1),
+            fsdp=False, seq_axis=None,
+            param_dtype=param_dtype, compute_dtype=compute_dtype,
+        )
+    return Dist(
+        tp="model" if "model" in names else None,
+        dp="data" if "data" in names else None,
+        pod="pod" if "pod" in names else None,
+        tp_size=sizes.get("model", 1),
+        dp_size=sizes.get("data", 1),
+        pod_size=sizes.get("pod", 1),
+        fsdp=(bool(cfg.fsdp) if fsdp is None else fsdp) and "data" in names,
+        seq_axis="data" if seq_sharded else None,
+        param_dtype=param_dtype,
+        compute_dtype=compute_dtype,
+    )
+
+
+def _axis_size(mesh, name) -> int:
+    if isinstance(mesh, dict):
+        sizes = mesh
+    else:
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if isinstance(name, tuple):
+        n = 1
+        for a in name:
+            n *= sizes.get(a, 1)
+        return n
+    return sizes.get(name, 1)
+
+
+def local_shape(shape: Tuple[int, ...], spec: P, mesh) -> Tuple[int, ...]:
+    out = list(shape)
+    for i, ax in enumerate(spec):
+        if ax is None:
+            continue
+        n = _axis_size(mesh, ax)
+        assert out[i] % n == 0, (shape, spec, i, n)
+        out[i] //= n
+    return tuple(out)
+
+
+def local_param_structs(param_structs, specs, mesh):
+    """Global ShapeDtypeStructs + specs -> local-shard structs."""
+    def f(s, sp):
+        return jax.ShapeDtypeStruct(local_shape(s.shape, sp, mesh), s.dtype)
+    return jax.tree.map(f, param_structs, specs,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def dp_axes_spec(dist: Dist):
+    """The spec entry sharding a batch dim over (pod, data)."""
+    axes = tuple(a for a in (dist.pod, dist.dp) if a is not None)
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def batch_spec_tree(cfg, dist: Dist, batch_struct, *, replicate_batch=False,
+                    microbatched=False):
+    """Spec for a batch pytree: dim0 (or dim1 if microbatched) over dp axes."""
+    b_dim = 1 if microbatched else 0
+    ax = None if replicate_batch else dp_axes_spec(dist)
+
+    def f(s):
+        parts = [None] * len(s.shape)
+        parts[b_dim] = ax
+        return P(*parts)
+    return jax.tree.map(f, batch_struct,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def kvdup_groups(rep: int, tp: int):
+    return [[h * rep + p for p in range(rep)] for h in range(tp // rep)]
+
+
+RWKV_REPLICATED = ("maa_", "tm_w1", "tm_w2", "td_w1")
+
+
+def apply_replicated_grad_reduction(grads, dist: Dist, *, rwkv: bool,
+                                    sp: bool):
+    """Some replicated params are consumed inside rank-varying regions and
+    accumulate rank-partial grads needing a model-axis psum:
+      - block norms under sequence parallelism (seq-partial; Megatron-SP's
+        separate LN grad all-reduce);
+      - RWKV token-shift mix / LoRA params (the two-boundary scheme in
+        rwkv6.py recomputes the mixes per rank)."""
+    if dist.tp is None or dist.tp_size == 1 or not (rwkv or sp):
+        return grads
+    flat = jax.tree_util.tree_flatten_with_path(grads)
+    leaves = []
+    for path, g in flat[0]:
+        name = "/".join(str(getattr(p, "key", p)) for p in path)
+        hit = (sp and ("ln1_" in name or "ln2_" in name)) or \
+            (rwkv and any(k in name for k in RWKV_REPLICATED))
+        if hit:
+            g = jax.lax.psum(g, dist.tp)
+        leaves.append(g)
+    return jax.tree_util.tree_unflatten(flat[1], leaves)
+
+
+def apply_sp_norm_reduction(grads, dist: Dist):
+    return apply_replicated_grad_reduction(grads, dist, rwkv=False,
+                                           sp=dist.seq_parallel)
+
+
+def apply_kvdup_reduction(grads, kvdup_tree, dist: Dist):
+    """Sum grads of kv-duplicated leaves across their replica groups so the
+    duplicated copies stay identical (see models/common.py docstring)."""
+    if dist.tp is None or dist.tp_size == 1:
+        return grads
+
+    def f(g, dup):
+        if not dup:
+            return g
+        groups = kvdup_groups(int(dup), dist.tp_size)
+        return jax.lax.psum(g, dist.tp, axis_index_groups=groups)
+    return jax.tree.map(f, grads, kvdup_tree)

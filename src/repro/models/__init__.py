@@ -1,0 +1,2 @@
+"""Model zoo: composable transformer assembly + specialty blocks
+(MoE/MLA/RWKV6/RG-LRU) + the paper's CNNs."""

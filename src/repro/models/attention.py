@@ -1,0 +1,178 @@
+"""Attention compute paths (pure JAX; the Pallas flash kernel is the TPU
+hot-spot twin validated against ``kernels/ref.py``).
+
+``blocked_attention`` is a double-scan online-softmax (flash-style) that
+never materialises the [Sq, Sk] score matrix — the lowering path for 32k
+prefill. ``full_attention`` is the small-shape einsum path. ``decode_attention``
+is the O(Sk) single-token path, optionally with the KV cache sharded along
+the sequence dim across a mesh axis (context-parallel decode: local partial
+softmax + pmax/psum combine).
+
+Mask kinds: causal, bidirectional, sliding ``window``, and llama4-style
+``chunk`` (block-diagonal causal chunks).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1e30
+
+
+def _mask(qpos, kpos, *, causal: bool, window: int, chunk: int):
+    m = jnp.ones(jnp.broadcast_shapes(qpos.shape, kpos.shape), bool)
+    if causal or window or chunk:
+        m &= kpos <= qpos
+    if window:
+        m &= kpos > qpos - window
+    if chunk:
+        m &= (kpos // chunk) == (qpos // chunk)
+    return m
+
+
+def _expand_kv(k, rep):
+    # [B, kvh, S, hd] -> [B, kvh*rep, S, hd] without materialising when rep==1
+    if rep == 1:
+        return k
+    b, kvh, s, hd = k.shape
+    return jnp.broadcast_to(k[:, :, None], (b, kvh, rep, s, hd)).reshape(
+        b, kvh * rep, s, hd)
+
+
+def full_attention(q, k, v, *, causal=True, window=0, chunk=0, q_offset=0,
+                   scale=None):
+    """q [B,H,Sq,D], k/v [B,Hkv,Sk,D]."""
+    b, h, sq, d = q.shape
+    kvh, sk = k.shape[1], k.shape[2]
+    scale = scale if scale is not None else d ** -0.5
+    k = _expand_kv(k, h // kvh)
+    v = _expand_kv(v, h // kvh)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qpos = q_offset + jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    m = _mask(qpos, kpos, causal=causal, window=window, chunk=chunk)
+    s = jnp.where(m[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def blocked_attention(q, k, v, *, causal=True, window=0, chunk=0,
+                      q_offset=0, scale=None, block_q=512, block_k=512):
+    """Flash-style double scan; [Sq,Sk] never materialised."""
+    b, h, sq, d = q.shape
+    kvh, sk = k.shape[1], k.shape[2]
+    scale = scale if scale is not None else d ** -0.5
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    pq, pk = (-sq) % bq, (-sk) % bk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    nq, nk = (sq + pq) // bq, (sk + pk) // bk
+    rep = h // kvh
+    kb = k.reshape(b, kvh, nk, bk, d)
+    vb = v.reshape(b, kvh, nk, bk, d)
+    qb = q.reshape(b, h, nq, bq, d).transpose(2, 0, 1, 3, 4)  # [nq,B,H,bq,d]
+
+    def q_step(_, iq_q):
+        iq, qc = iq_q                                    # qc [B,H,bq,d]
+        qpos = q_offset + iq * bq + jnp.arange(bq)
+
+        def k_step(carry, ik_kv):
+            m_r, l_r, acc = carry
+            ik, kc, vc = ik_kv                           # [B,kvh,bk,d]
+            kc = _expand_kv(kc, rep)
+            vc = _expand_kv(vc, rep)
+            s = jnp.einsum("bhqd,bhkd->bhqk", qc.astype(jnp.float32),
+                           kc.astype(jnp.float32)) * scale
+            kpos = ik * bk + jnp.arange(bk)
+            msk = _mask(qpos[:, None], kpos[None, :],
+                        causal=causal, window=window, chunk=chunk)
+            msk &= (kpos < sk)[None, :]
+            s = jnp.where(msk[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_r, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            p = jnp.where(msk[None, None], p, 0.0)
+            alpha = jnp.exp(m_r - m_new)
+            l_new = alpha * l_r + p.sum(-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p, vc.astype(jnp.float32))
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, h, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, bq), jnp.float32)
+        a0 = jnp.zeros((b, h, bq, d), jnp.float32)
+        (m_r, l_r, acc), _ = lax.scan(
+            k_step, (m0, l0, a0),
+            (jnp.arange(nk), kb.transpose(2, 0, 1, 3, 4),
+             vb.transpose(2, 0, 1, 3, 4)))
+        l_r = jnp.where(l_r == 0.0, 1.0, l_r)
+        return None, (acc / l_r[..., None]).astype(q.dtype)
+
+    _, out = lax.scan(q_step, None, (jnp.arange(nq), qb))
+    out = out.transpose(1, 2, 0, 3, 4).reshape(b, h, sq + pq, d)
+    return out[:, :, :sq]
+
+
+def attention(q, k, v, *, causal=True, window=0, chunk=0, q_offset=0,
+              scale=None, block_threshold=2048):
+    """Dispatch: small shapes -> einsum; long -> blocked scan."""
+    if q.shape[2] * k.shape[2] <= block_threshold * block_threshold:
+        return full_attention(q, k, v, causal=causal, window=window,
+                              chunk=chunk, q_offset=q_offset, scale=scale)
+    return blocked_attention(q, k, v, causal=causal, window=window,
+                             chunk=chunk, q_offset=q_offset, scale=scale)
+
+
+def decode_attention(q, k_cache, v_cache, t, *, window=0, chunk=0, scale=None,
+                     seq_axis: Optional[str] = None, positions=None):
+    """Single-token decode against a cache.
+
+    q [B,H,1,D]; caches [B,Hkv,S,D]; ``t`` = tokens already in cache (the new
+    token's position). ``positions``: per-slot position ids (ring buffers);
+    default = arange(S). ``seq_axis``: cache sharded along S across that mesh
+    axis — local partial softmax, then pmax/psum combine (context-parallel).
+    """
+    b, h, _, d = q.shape
+    kvh, s_loc = k_cache.shape[1], k_cache.shape[2]
+    scale = scale if scale is not None else d ** -0.5
+    rep = h // kvh
+    kc = _expand_kv(k_cache, rep)
+    vc = _expand_kv(v_cache, rep)
+    if positions is None:
+        positions = jnp.arange(s_loc)
+        if seq_axis is not None:
+            positions = positions + lax.axis_index(seq_axis) * s_loc
+    valid = (positions >= 0) & (positions < t)
+    if window:
+        # t tokens cached; the query sits at position t-1 and attends to
+        # positions > (t-1) - window, i.e. >= t - window
+        valid &= positions >= t - window
+    if chunk:
+        valid &= positions >= ((t - 1) // chunk) * chunk  # same-chunk only
+    sc = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                    kc.astype(jnp.float32))[:, :, 0] * scale   # [B,H,S]
+    sc = jnp.where(valid[None, None], sc, NEG_INF)
+    m_loc = sc.max(-1)
+    if seq_axis is not None:
+        m = lax.pmax(m_loc, seq_axis)
+    else:
+        m = m_loc
+    p = jnp.exp(sc - m[..., None])
+    p = jnp.where(valid[None, None], p, 0.0)
+    l_loc = p.sum(-1)
+    o_loc = jnp.einsum("bhk,bhkd->bhd", p, vc.astype(jnp.float32))
+    if seq_axis is not None:
+        l = lax.psum(l_loc, seq_axis)
+        o = lax.psum(o_loc, seq_axis)
+    else:
+        l, o = l_loc, o_loc
+    l = jnp.where(l == 0.0, 1.0, l)
+    return (o / l[..., None])[:, :, None].astype(q.dtype)   # [B,H,1,D]

@@ -1,0 +1,204 @@
+"""Shared model-building machinery: distribution context, parameter sets,
+GQA head layout for 16-way TP, norms, activations, RoPE.
+
+Parameter convention
+--------------------
+``init`` functions return arrays in *global* (unsharded) shapes together with
+a parallel tree of ``PartitionSpec`` (for shard_map in_specs), a ``stacked``
+bool tree (leading dim is a layer-group dim — drives FSDP + the compressor's
+layer-wise thresholds) and a ``kvdup`` tree (replica-group id for
+kv-duplicated leaves whose grads need a grouped psum over the model axis).
+
+Head layout: query heads are ordered kv-group-major, so that when
+``kv < tp`` each model rank's queries attend to exactly one kv head
+(replicated ``tp/kv``-way). Ranks whose group is short carry padded heads
+masked in the forward (their params stay frozen-zero). No padding is needed
+when ``kv >= tp``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import tpops
+
+
+@dataclass(frozen=True)
+class Dist:
+    """Distribution context threaded through model code.
+
+    ``tp/dp/pod`` are mesh axis names (None = absent: single-device smoke).
+    ``tp_size``/``dp_size`` are static (needed for shapes at init time).
+    """
+    tp: Optional[str] = None
+    dp: Optional[str] = None
+    pod: Optional[str] = None
+    tp_size: int = 1
+    dp_size: int = 1
+    pod_size: int = 1
+    fsdp: bool = False              # shard stacked params' inner dim over dp
+    seq_axis: Optional[str] = None  # shard a long decode KV cache over dp
+    seq_parallel: bool = False      # Megatron-SP: residual stream sharded
+                                    # over 'model' along seq between blocks
+                                    # (train/prefill only; same wire bytes,
+                                    # activations / tp memory)
+    # serving-only knobs (EXPERIMENTS.md §Perf / deepseek serving):
+    ep_over_data: bool = False      # MoE experts sharded over 'data', expert
+                                    # ffn width tensor-parallel over 'model'
+    mla_cache_tp: bool = False      # MLA latent cache sharded over 'model'
+                                    # along S (context-parallel decode)
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.float32
+
+    @property
+    def dp_axes(self) -> Tuple[Optional[str], ...]:
+        axes = tuple(a for a in (self.dp, self.pod) if a is not None)
+        return axes or (None,)
+
+
+class ParamSet:
+    """params + parallel metadata trees (specs / stacked / kvdup / fsdp_dim)."""
+
+    def __init__(self):
+        self.params: Dict[str, Any] = {}
+        self.specs: Dict[str, Any] = {}
+        self.stacked: Dict[str, Any] = {}
+        self.kvdup: Dict[str, Any] = {}     # replica group size or 0
+        self.fsdp_dim: Dict[str, Any] = {}  # int dim (in sliced shape) or -1
+
+    def add(self, name, value, spec, stacked=False, kvdup=0, fsdp_dim=-1):
+        self.params[name] = value
+        self.specs[name] = spec
+        self.stacked[name] = stacked
+        self.kvdup[name] = kvdup
+        self.fsdp_dim[name] = fsdp_dim
+
+    def merge(self, name, sub: "ParamSet"):
+        self.params[name] = sub.params
+        self.specs[name] = sub.specs
+        self.stacked[name] = sub.stacked
+        self.kvdup[name] = sub.kvdup
+        self.fsdp_dim[name] = sub.fsdp_dim
+
+
+@dataclass(frozen=True)
+class GQALayout:
+    tp: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+
+    @property
+    def rep(self) -> int:                    # kv replication factor
+        return max(1, self.tp // max(self.n_kv, 1))
+
+    @property
+    def kv_local(self) -> int:
+        return max(1, self.n_kv // self.tp)
+
+    @property
+    def group_q(self) -> int:                # q heads per kv head
+        return self.n_heads // max(self.n_kv, 1)
+
+    @property
+    def q_local(self) -> int:                # q heads per rank (maybe padded)
+        if self.n_kv >= self.tp:
+            return self.n_heads // self.tp
+        return -(-self.group_q // self.rep)  # ceil
+
+    @property
+    def padded_heads(self) -> int:
+        return self.q_local * self.tp
+
+    def valid_q(self, rank) -> jnp.ndarray:
+        """[q_local] bool — which of this rank's q heads are real."""
+        j = jnp.arange(self.q_local)
+        if self.n_kv >= self.tp:
+            return jnp.ones((self.q_local,), bool)
+        pos = rank % self.rep
+        return pos * self.q_local + j < self.group_q
+
+    def kv_replica_groups(self):
+        """axis_index_groups for grad reduction of kv-duplicated params."""
+        if self.n_kv >= self.tp:
+            return None
+        return [[h * self.rep + p for p in range(self.rep)]
+                for h in range(self.n_kv)]
+
+
+# ---------------------------------------------------------------------------
+# initialisers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: Optional[float] = None):
+    s = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out)) * s).astype(dtype)
+
+
+def kv_dup_init(key, d_in: int, kv: int, width_per_kv: int, layout: GQALayout,
+                dtype, scale: Optional[float] = None):
+    """KV projection, stored expanded to [d_in, tp * kv_local * width] with
+    the rank->kv-head duplication baked in (kv < tp), so a plain
+    PartitionSpec shard gives each rank its head's weights."""
+    base = dense_init(key, d_in, kv * width_per_kv, dtype, scale)
+    if layout.n_kv >= layout.tp:
+        return base
+    base = base.reshape(d_in, kv, width_per_kv)
+    expanded = jnp.repeat(base, layout.rep, axis=1)      # rank r -> head r//rep
+    return expanded.reshape(d_in, layout.tp * layout.kv_local * width_per_kv)
+
+
+# ---------------------------------------------------------------------------
+# norms / activations / rope
+# ---------------------------------------------------------------------------
+
+def norm_init(pset: ParamSet, name: str, d: int, kind: str, dtype):
+    pset.add(f"{name}_scale", jnp.ones((d,), dtype), P())
+    if kind == "layernorm":
+        pset.add(f"{name}_bias", jnp.zeros((d,), dtype), P())
+
+
+def apply_norm(params, name: str, x, kind: str, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * params[f"{name}_scale"].astype(jnp.float32) \
+            + params[f"{name}_bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = (xf * xf).mean(-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps)
+        y = y * params[f"{name}_scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def act_fn(kind: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[kind]
+
+
+def rope_angles(positions, head_dim: int, theta: float, rope_pct: float = 1.0):
+    """positions [*, S] -> cos/sin [*, S, rot/2]; rot = even(head_dim*pct)."""
+    rot = int(head_dim * rope_pct) // 2 * 2
+    freqs = theta ** (-jnp.arange(0, rot, 2, dtype=jnp.float32) / rot)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang), rot
+
+
+def apply_rope(x, cos, sin, rot: int):
+    """x [..., S, hd]; rotate the first ``rot`` dims, pass the rest through."""
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., : rot // 2], xr[..., rot // 2:]
+    # broadcast cos/sin [S, rot/2] across leading dims
+    shape = (1,) * (x.ndim - 2) + cos.shape[-2:]
+    c = cos.reshape(shape).astype(jnp.float32)
+    s = sin.reshape(shape).astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * c - x2f * s, x1f * s + x2f * c], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), xp], axis=-1)

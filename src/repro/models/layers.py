@@ -1,0 +1,296 @@
+"""Core transformer layers with manual 16-way tensor parallelism:
+GQA attention (padded/duplicated head layout from common.GQALayout),
+gated MLP, vocab-sharded embedding/unembedding, and the sharded
+cross-entropy whose collectives are f-ops (psum fwd / identity bwd) so
+per-rank autodiff yields exact global grads.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from jax import lax
+
+from repro.core import tpops
+from repro.models import attention as attn_mod
+from repro.models.common import (Dist, GQALayout, ParamSet, apply_rope,
+                                 act_fn, dense_init, kv_dup_init, rope_angles)
+
+# ---------------------------------------------------------------------------
+# attention block
+# ---------------------------------------------------------------------------
+
+
+def gqa_layout(cfg, tp_size: int) -> GQALayout:
+    return GQALayout(tp=tp_size, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                     head_dim=cfg.head_dim)
+
+
+def attn_init(key, cfg, tp_size: int, dtype) -> ParamSet:
+    lo = gqa_layout(cfg, tp_size)
+    d, hd = cfg.d_model, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    ps = ParamSet()
+    ps.add("wq", dense_init(ks[0], d, lo.padded_heads * hd, dtype),
+           P(None, "model"), fsdp_dim=0)
+    dup = lo.rep if cfg.n_kv_heads < tp_size else 0
+    ps.add("wk", kv_dup_init(ks[1], d, cfg.n_kv_heads, hd, lo, dtype),
+           P(None, "model"), kvdup=dup, fsdp_dim=0)
+    ps.add("wv", kv_dup_init(ks[2], d, cfg.n_kv_heads, hd, lo, dtype),
+           P(None, "model"), kvdup=dup, fsdp_dim=0)
+    ps.add("wo", dense_init(ks[3], lo.padded_heads * hd, d, dtype),
+           P("model", None), fsdp_dim=1)
+    if cfg.qkv_bias:
+        ps.add("bq", jnp.zeros((lo.padded_heads * hd,), dtype), P("model"))
+        bkv = jnp.zeros((tp_size * lo.kv_local * hd,), dtype) \
+            if cfg.n_kv_heads < tp_size else jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+        ps.add("bk", bkv, P("model"), kvdup=dup)
+        ps.add("bv", bkv, P("model"), kvdup=dup)
+    return ps
+
+
+def attn_apply(cfg, dist: Dist, p: Dict[str, Any], x, *, kind: str = "full",
+               q_offset=0, cache: Optional[dict] = None,
+               reduce: bool = True,
+               copy: bool = True) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """kind: full | local | chunked | nope_full. ``cache`` not None => decode
+    one token (x is [B, 1, d]); returns (partial-or-reduced out, new cache).
+    ``copy=False``: caller already applied the copy_in boundary (parallel
+    blocks share one boundary — halves the backward psum bytes)."""
+    lo = gqa_layout(cfg, dist.tp_size)
+    b, s, d = x.shape
+    hd = cfg.head_dim
+    r = tpops.axis_index(dist.tp)
+
+    h = tpops.copy_in(x, dist.tp, tag="attn_in") if copy else x
+    q = h @ p["wq"].astype(dist.compute_dtype)
+    k = h @ p["wk"].astype(dist.compute_dtype)
+    v = h @ p["wv"].astype(dist.compute_dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dist.compute_dtype)
+        k = k + p["bk"].astype(dist.compute_dtype)
+        v = v + p["bv"].astype(dist.compute_dtype)
+    q = q.reshape(b, s, lo.q_local, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b, s, lo.kv_local, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, lo.kv_local, hd).transpose(0, 2, 1, 3)
+
+    use_rope = kind != "nope_full" and not cfg.is_encoder
+    if use_rope:
+        if cache is not None:
+            pos = cache["t"].reshape(1)          # new token's position
+        else:
+            pos = q_offset + jnp.arange(s)
+        cos, sin, rot = rope_angles(pos, hd, cfg.rope_theta, cfg.rope_pct)
+        q = apply_rope(q, cos, sin, rot)
+        k = apply_rope(k, cos, sin, rot)
+
+    window = cfg.window if kind == "local" else 0
+    ring = cache is not None and "pos" in cache
+    seq_sharded = cache is not None and "seqshard" in cache
+    if cfg.long_context_window and ring and kind == "full":
+        window = cfg.long_context_window
+    chunk = cfg.chunk if kind == "chunked" else 0
+
+    new_cache = None
+    if cache is not None:
+        t = cache["t"]                               # tokens already cached
+        cap = cache["k"].shape[2]
+        if ring:
+            slot = t % cap
+        else:
+            slot = jnp.minimum(t, cap - 1)
+        if seq_sharded:
+            # cache sharded along seq over dp: only the owning rank writes
+            # (single-row conditional write: full-buffer where() kept an
+            # extra cache copy live)
+            rk = tpops.axis_index(dist.seq_axis or dist.dp)
+            local = t - rk * cap
+            own = (local >= 0) & (local < cap)
+            ls = jnp.clip(local, 0, cap - 1)
+            bq, kvl, _, hdv = cache["k"].shape
+            cur_k = jax.lax.dynamic_slice(cache["k"], (0, 0, ls, 0),
+                                          (bq, kvl, 1, hdv))
+            cur_v = jax.lax.dynamic_slice(cache["v"], (0, 0, ls, 0),
+                                          (bq, kvl, 1, hdv))
+            row_k = jnp.where(own, k.astype(cache["k"].dtype), cur_k)
+            row_v = jnp.where(own, v.astype(cache["v"].dtype), cur_v)
+            kc = jax.lax.dynamic_update_slice(cache["k"], row_k,
+                                              (0, 0, ls, 0))
+            vc = jax.lax.dynamic_update_slice(cache["v"], row_v,
+                                              (0, 0, ls, 0))
+        else:
+            kc = jax.lax.dynamic_update_slice(cache["k"], k, (0, 0, slot, 0))
+            vc = jax.lax.dynamic_update_slice(cache["v"], v, (0, 0, slot, 0))
+        if ring:
+            positions = cache["pos"].at[slot].set(t)
+        else:
+            positions = None
+        out = attn_mod.decode_attention(
+            q, kc, vc, t + 1, window=window,
+            chunk=cfg.chunk if kind == "chunked" else 0,
+            seq_axis=dist.seq_axis if seq_sharded else None,
+            positions=positions)
+        new_cache = dict(cache, k=kc, v=vc, t=t + 1)
+        if positions is not None:
+            new_cache["pos"] = positions
+    else:
+        out = attn_mod.attention(q, k, v, causal=not cfg.is_encoder,
+                                 window=window, chunk=chunk,
+                                 q_offset=q_offset)
+
+    valid = lo.valid_q(r)                            # mask padded heads
+    out = out * valid[None, :, None, None].astype(out.dtype)
+    out = out.transpose(0, 2, 1, 3).reshape(b, -1, lo.q_local * hd)
+    y = out @ p["wo"].astype(dist.compute_dtype)
+    if reduce:
+        y = tpops.allreduce(y, dist.tp, tag="attn_out")
+    return y, new_cache
+
+
+def init_attn_cache(cfg, dist: Dist, batch_local: int, capacity: int, *,
+                    ring: bool = False, seq_sharded: bool = False,
+                    dtype=jnp.bfloat16) -> dict:
+    """Structural flags: a "pos" entry marks a ring buffer; a "seqshard"
+    entry (empty placeholder) marks a sequence-sharded cache."""
+    lo = gqa_layout(cfg, dist.tp_size)
+    cap = capacity
+    if seq_sharded:
+        cap = capacity // max(dist.dp_size, 1)
+    c = {"k": jnp.zeros((batch_local, lo.kv_local, cap, cfg.head_dim), dtype),
+         "v": jnp.zeros((batch_local, lo.kv_local, cap, cfg.head_dim), dtype),
+         "t": jnp.zeros((), jnp.int32)}
+    if ring:
+        c["pos"] = jnp.full((cap,), -1, jnp.int32)
+    if seq_sharded:
+        c["seqshard"] = jnp.zeros((0,), jnp.int32)
+    return c
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, cfg, tp_size: int, dtype, d_ff: Optional[int] = None,
+             prefix: str = "") -> ParamSet:
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    ps = ParamSet()
+    ps.add("w_up", dense_init(ks[0], d, ff, dtype), P(None, "model"),
+           fsdp_dim=0)
+    if cfg.glu:
+        ps.add("w_gate", dense_init(ks[1], d, ff, dtype), P(None, "model"),
+               fsdp_dim=0)
+    ps.add("w_down", dense_init(ks[2], ff, d, dtype, scale=ff ** -0.5),
+           P("model", None), fsdp_dim=1)
+    return ps
+
+
+def mlp_apply(cfg, dist: Dist, p, x, *, reduce: bool = True,
+              copy: bool = True):
+    h = tpops.copy_in(x, dist.tp, tag="mlp_in") if copy else x
+    u = h @ p["w_up"].astype(dist.compute_dtype)
+    a = act_fn(cfg.act)
+    if cfg.glu:
+        g = h @ p["w_gate"].astype(dist.compute_dtype)
+        u = a(g) * u
+    else:
+        u = a(u)
+    y = u @ p["w_down"].astype(dist.compute_dtype)
+    if reduce:
+        y = tpops.allreduce(y, dist.tp, tag="mlp_out")
+    return y
+
+
+# ---------------------------------------------------------------------------
+# vocab-sharded embedding / unembedding / cross-entropy
+# ---------------------------------------------------------------------------
+
+def padded_vocab(vocab: int, tp_size: int) -> int:
+    mult = tp_size * 128
+    return -(-vocab // mult) * mult
+
+
+def embed_init(key, cfg, tp_size: int, dtype) -> ParamSet:
+    vp = padded_vocab(cfg.vocab_size, tp_size)
+    ps = ParamSet()
+    ps.add("wemb", (jax.random.normal(key, (vp, cfg.d_model)) *
+                    cfg.d_model ** -0.5).astype(dtype), P("model", None))
+    return ps
+
+
+def embed_lookup(cfg, dist: Dist, wemb, ids):
+    """ids [B,S] int32 -> [B,S,d]; vocab rows sharded over tp."""
+    vloc = wemb.shape[0]
+    off = tpops.axis_index(dist.tp) * vloc
+    loc = ids - off
+    ok = (loc >= 0) & (loc < vloc)
+    emb = jnp.take(wemb, jnp.clip(loc, 0, vloc - 1), axis=0)
+    emb = jnp.where(ok[..., None], emb, 0).astype(dist.compute_dtype)
+    emb = tpops.allreduce(emb, dist.tp, tag="embed")
+    if cfg.embed_scale:
+        emb = emb * jnp.asarray(cfg.d_model ** 0.5, emb.dtype)
+    return emb
+
+
+def unembed(dist: Dist, wemb, x):
+    """x [B,S,d] -> sharded logits [B,S,vloc]."""
+    h = tpops.copy_in(x, dist.tp, tag="unembed")
+    return h @ wemb.astype(dist.compute_dtype).T
+
+
+def sharded_argmax(cfg, dist: Dist, logits_local):
+    """argmax over the tp-sharded vocab WITHOUT materialising merged logits
+    (merging 100k+ logits per token dominated decode collectives —
+    EXPERIMENTS.md §Perf). Gathers one (max, idx) pair per rank instead."""
+    vloc = logits_local.shape[-1]
+    off = tpops.axis_index(dist.tp) * vloc
+    lg = logits_local.astype(jnp.float32)
+    col = off + jnp.arange(vloc)
+    lg = jnp.where((col < cfg.vocab_size), lg, -jnp.inf)
+    loc_idx = jnp.argmax(lg, axis=-1)                      # [...]
+    loc_max = jnp.max(lg, axis=-1)
+    loc_gid = loc_idx + off
+    if dist.tp is None:
+        return loc_gid.astype(jnp.int32)
+    maxes = lax.all_gather(loc_max, dist.tp, axis=0)       # [tp, ...]
+    gids = lax.all_gather(loc_gid, dist.tp, axis=0)
+    win = jnp.argmax(maxes, axis=0)
+    return jnp.take_along_axis(gids, win[None], axis=0)[0].astype(jnp.int32)
+
+
+def sharded_xent(cfg, dist: Dist, logits_local, labels):
+    """Mean CE over tokens with label >= 0, vocab sharded over tp."""
+    nll, w = sharded_xent_parts(cfg, dist, logits_local, labels)
+    return nll / jnp.maximum(w, 1.0)
+
+
+def sharded_xent_parts(cfg, dist: Dist, logits_local, labels):
+    """(sum NLL, sum weight) over tokens with label >= 0, vocab sharded
+    over tp.
+
+    All cross-rank reductions are f-ops (psum fwd / identity bwd), so the
+    per-rank backward produces exact global dlogits.
+    """
+    vloc = logits_local.shape[-1]
+    off = tpops.axis_index(dist.tp) * vloc
+    lg = logits_local.astype(jnp.float32)
+    # mask vocab padding columns
+    col = off + jnp.arange(vloc)
+    lg = jnp.where((col < cfg.vocab_size)[None, None, :], lg, -1e30)
+    m = jax.lax.stop_gradient(lg.max(-1))
+    if dist.tp is not None:
+        m = jax.lax.stop_gradient(jax.lax.pmax(m, dist.tp))
+    e = jnp.exp(lg - m[..., None])
+    denom = tpops.allreduce(e.sum(-1), dist.tp, tag="xent")
+    loc = labels - off
+    ok = (loc >= 0) & (loc < vloc)
+    lt_loc = jnp.take_along_axis(
+        lg, jnp.clip(loc, 0, vloc - 1)[..., None], axis=-1)[..., 0]
+    lt = tpops.allreduce(jnp.where(ok, lt_loc, 0.0), dist.tp, tag="xent")
+    w = (labels >= 0).astype(jnp.float32)
+    nll = (jnp.log(denom) + m - lt) * w
+    return nll.sum(), w.sum()

@@ -1,0 +1,179 @@
+"""DeepSeek-V2 Multi-head Latent Attention (MLA) with 16-way TP.
+
+Latent projections (w_dq, w_dkv) are small and replicated; the per-head
+up-projections are head-sharded over the model axis (128 heads / 16). The
+decode path uses the *absorbed* formulation: queries are pulled into the
+latent space (q @ w_uk), so the KV cache is just the latent
+[B, S, kv_lora + rope_dim] — 576 floats per token regardless of head count.
+Prefill/train use the standard expanded formulation (matmul-friendly).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import tpops
+from repro.models import attention as attn_mod
+from repro.models.common import (Dist, ParamSet, apply_rope, dense_init,
+                                 rope_angles)
+
+NEG_INF = -1e30
+
+
+def _rms(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt((xf * xf).mean(-1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def mla_init(key, cfg, tp_size: int, dtype) -> ParamSet:
+    m = cfg.mla
+    d, H, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    assert H % tp_size == 0
+    ks = jax.random.split(key, 7)
+    ps = ParamSet()
+    ps.add("w_dq", dense_init(ks[0], d, m.q_lora_rank, dtype), P())
+    ps.add("q_norm", jnp.ones((m.q_lora_rank,), dtype), P())
+    ps.add("w_uq", dense_init(ks[1], m.q_lora_rank,
+                              H * (hd + m.rope_head_dim), dtype),
+           P(None, "model"), fsdp_dim=0)
+    ps.add("w_dkv", dense_init(ks[2], d, m.kv_lora_rank + m.rope_head_dim,
+                               dtype), P())
+    ps.add("kv_norm", jnp.ones((m.kv_lora_rank,), dtype), P())
+    ps.add("w_uk", dense_init(ks[3], m.kv_lora_rank, H * hd, dtype),
+           P(None, "model"), fsdp_dim=0)
+    ps.add("w_uv", dense_init(ks[4], m.kv_lora_rank, H * m.v_head_dim, dtype),
+           P(None, "model"), fsdp_dim=0)
+    ps.add("wo", dense_init(ks[5], H * m.v_head_dim, d, dtype),
+           P("model", None), fsdp_dim=1)
+    return ps
+
+
+def mla_apply(cfg, dist: Dist, p: Dict[str, Any], x, *, q_offset=0,
+              cache: Optional[dict] = None, reduce: bool = True,
+              ) -> Tuple[jnp.ndarray, Optional[dict]]:
+    m = cfg.mla
+    b, s, d = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    hl = H // dist.tp_size
+    cd = dist.compute_dtype
+    scale = (hd + m.rope_head_dim) ** -0.5
+
+    # replicated latent projections (exact grads: consumed via copy_in)
+    cq = _rms(x @ p["w_dq"].astype(cd), p["q_norm"])
+    ckv_full = x @ p["w_dkv"].astype(cd)
+    ckv = _rms(ckv_full[..., : m.kv_lora_rank], p["kv_norm"])
+    k_rope = ckv_full[..., m.kv_lora_rank:]                  # [B,S,rope]
+
+    if cache is not None:
+        pos = cache["t"].reshape(1)
+    else:
+        pos = q_offset + jnp.arange(s)
+    cos, sin, rot = rope_angles(pos, m.rope_head_dim, cfg.rope_theta)
+    k_rope = apply_rope(k_rope[:, None], cos, sin, rot)[:, 0]  # single "head"
+
+    q = tpops.copy_in(cq, dist.tp, tag="mla_q") @ p["w_uq"].astype(cd)
+    q = q.reshape(b, s, hl, hd + m.rope_head_dim).transpose(0, 2, 1, 3)
+    q_nope, q_rope = q[..., :hd], q[..., hd:]
+    q_rope = apply_rope(q_rope, cos, sin, rot)
+
+    if cache is None:
+        ckv_in = tpops.copy_in(ckv, dist.tp, tag="mla_kv")
+        k_nope = (ckv_in @ p["w_uk"].astype(cd)).reshape(
+            b, s, hl, hd).transpose(0, 2, 1, 3)
+        v = (ckv_in @ p["w_uv"].astype(cd)).reshape(
+            b, s, hl, m.v_head_dim).transpose(0, 2, 1, 3)
+        # k_rope is replicated but consumed per-head in the sharded
+        # attention: boundary needed for exact w_dkv grads.
+        kr_in = tpops.copy_in(k_rope, dist.tp, tag="mla_kv")
+        kr = jnp.broadcast_to(kr_in[:, None],
+                              (b, hl, s, m.rope_head_dim))
+        qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+        kk = jnp.concatenate([k_nope, kr], axis=-1)
+        # pad v to qk width so the generic kernel applies, then slice
+        out = attn_mod.attention(qq, kk,
+                                 jnp.pad(v, ((0, 0), (0, 0), (0, 0),
+                                             (0, hd + m.rope_head_dim
+                                              - m.v_head_dim))),
+                                 causal=True, q_offset=q_offset, scale=scale)
+        out = out[..., : m.v_head_dim]
+        new_cache = None
+    else:
+        # ---- absorbed decode against the latent cache ----
+        t = cache["t"]
+        lat = jnp.concatenate([ckv, k_rope], axis=-1)        # [B,1,lora+rope]
+        cache_tp = "seqshard_tp" in cache   # latent cache S-sharded over tp
+        if cache_tp:
+            cap = cache["lat"].shape[1]
+            rk = tpops.axis_index(dist.tp)
+            local = t - rk * cap
+            own = (local >= 0) & (local < cap)
+            ls = jnp.clip(local, 0, cap - 1)
+            # single-row conditional write (a full-buffer where() kept an
+            # extra cache copy live — EXPERIMENTS.md §Perf)
+            cur = jax.lax.dynamic_slice(
+                cache["lat"], (0, ls, 0), (b, 1, cache["lat"].shape[2]))
+            row = jnp.where(own, lat.astype(cache["lat"].dtype), cur)
+            latc = jax.lax.dynamic_update_slice(cache["lat"], row,
+                                                (0, ls, 0))
+            positions = jnp.arange(cap) + rk * cap
+        else:
+            latc = jax.lax.dynamic_update_slice(
+                cache["lat"], lat.astype(cache["lat"].dtype), (0, t, 0))
+            positions = jnp.arange(cache["lat"].shape[1])
+        ckv_c = latc[..., : m.kv_lora_rank].astype(cd)       # [B,S,lora]
+        kr_c = latc[..., m.kv_lora_rank:].astype(cd)         # [B,S,rope]
+        w_uk = p["w_uk"].astype(cd).reshape(m.kv_lora_rank, hl, hd)
+        q_lat = jnp.einsum("bhqd,lhd->bhql", q_nope, w_uk)   # [B,hl,1,lora]
+        if cache_tp:
+            # positions AND heads are both sharded over the model axis:
+            # all-gather the (single-token, tiny) queries so every rank
+            # scores ALL heads over its position shard, psum-combine, then
+            # slice the local heads back for the head-sharded w_uv/wo.
+            q_lat_all = tpops.merge(q_lat, dist.tp, dim=1, tag="mla_cp")
+            q_rope_all = tpops.merge(q_rope, dist.tp, dim=1, tag="mla_cp")
+        else:
+            q_lat_all, q_rope_all = q_lat, q_rope
+        sc = (jnp.einsum("bhql,bsl->bhqs", q_lat_all.astype(jnp.float32),
+                         ckv_c.astype(jnp.float32))
+              + jnp.einsum("bhqr,bsr->bhqs", q_rope_all.astype(jnp.float32),
+                           kr_c.astype(jnp.float32)))[:, :, 0] * scale
+        valid = positions < t + 1
+        sc = jnp.where(valid[None, None], sc, NEG_INF)
+        if cache_tp:
+            # context-parallel distributed softmax over the model axis
+            mx = jax.lax.pmax(sc.max(-1), dist.tp)           # [B,H]
+            pr = jnp.exp(sc - mx[..., None])
+            denom = jax.lax.psum(pr.sum(-1), dist.tp)
+            o_all = jnp.einsum("bhs,bsl->bhl", pr,
+                               ckv_c.astype(jnp.float32))
+            o_all = jax.lax.psum(o_all, dist.tp) / denom[..., None]
+            rk2 = tpops.axis_index(dist.tp)
+            o_lat = jax.lax.dynamic_slice_in_dim(o_all, rk2 * hl, hl, axis=1)
+        else:
+            pmax = sc.max(-1, keepdims=True)
+            pr = jnp.exp(sc - pmax)
+            pr = pr / pr.sum(-1, keepdims=True)              # [B,hl,S]
+            o_lat = jnp.einsum("bhs,bsl->bhl", pr,
+                               ckv_c.astype(jnp.float32))    # [B,hl,lora]
+        w_uv = p["w_uv"].astype(cd).reshape(m.kv_lora_rank, hl, m.v_head_dim)
+        out = jnp.einsum("bhl,lhv->bhv", o_lat.astype(cd),
+                         w_uv)[:, :, None, :]                # [B,hl,1,v]
+        new_cache = dict(cache, lat=latc, t=t + 1)
+
+    y = out.transpose(0, 2, 1, 3).reshape(b, -1, hl * m.v_head_dim)
+    y = y @ p["wo"].astype(cd)
+    if reduce:
+        y = tpops.allreduce(y, dist.tp, tag="mla_out")
+    return y, new_cache
+
+
+def init_mla_cache(cfg, dist: Dist, batch_local: int, capacity: int,
+                   dtype=jnp.bfloat16) -> dict:
+    m = cfg.mla
+    return {"lat": jnp.zeros((batch_local, capacity,
+                              m.kv_lora_rank + m.rope_head_dim), dtype),
+            "t": jnp.zeros((), jnp.int32)}

@@ -1,0 +1,195 @@
+"""Mixture-of-Experts with expert parallelism over the ``model`` axis.
+
+GShard-style capacity dispatch, TPU-adapted:
+  - routing is computed on the (tp-replicated) full token set — cheap, and it
+    keeps router grads exact without extra collectives;
+  - tokens are then tp_split across the model axis, scattered into a static
+    [E, C, d] capacity buffer, all_to_all'd to the expert-owning ranks,
+    batch-einsum'd through the local experts, and all_to_all'd back;
+  - tokens over capacity are dropped (signal still flows via the shared
+    experts, DeepSeek/Llama4 style).
+
+Aux losses: Switch-style load-balance + router z-loss.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core import tpops
+from repro.models.common import Dist, ParamSet, act_fn, dense_init
+from repro.models import layers as L
+
+
+def moe_init(key, cfg, tp_size: int, dtype, *,
+             ep_over_data: bool = False) -> ParamSet:
+    m = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    ps = ParamSet()
+    ps.add("w_router", dense_init(ks[0], d, m.n_experts, jnp.float32,
+                                  scale=d ** -0.5), P())
+    if ep_over_data:
+        # serving layout: experts over 'data', expert ffn width over 'model'
+        up_spec, down_spec = P("data", None, "model"), P("data", "model", None)
+    else:
+        up_spec, down_spec = P("model", None, None), P("model", None, None)
+    ps.add("we_up", jax.random.normal(ks[1], (m.n_experts, d, m.d_ff_expert))
+           .astype(dtype) * d ** -0.5, up_spec, fsdp_dim=1)
+    if cfg.glu:
+        ps.add("we_gate",
+               jax.random.normal(ks[2], (m.n_experts, d, m.d_ff_expert))
+               .astype(dtype) * d ** -0.5, up_spec, fsdp_dim=1)
+    ps.add("we_down",
+           jax.random.normal(ks[3], (m.n_experts, m.d_ff_expert, d))
+           .astype(dtype) * m.d_ff_expert ** -0.5,
+           down_spec, fsdp_dim=2)
+    if m.n_shared_experts:
+        shared = L.mlp_init(ks[4], cfg, tp_size, dtype,
+                            d_ff=m.n_shared_experts * m.d_ff_expert)
+        ps.merge("shared", shared)
+    return ps
+
+
+def _split_nograd(x, axis, dim):
+    if axis is None:
+        return x
+    n = lax.axis_size(axis)
+    r = lax.axis_index(axis)
+    size = x.shape[dim] // n
+    return lax.dynamic_slice_in_dim(x, r * size, size, axis=dim)
+
+
+def moe_apply(cfg, dist: Dist, p: Dict[str, Any], x,
+              ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    if dist.ep_over_data:
+        return _moe_apply_ep_data(cfg, dist, p, x)
+    m = cfg.moe
+    b, s, d = x.shape
+    t_full = b * s
+    xt = x.reshape(t_full, d)
+
+    # ---- routing on the replicated token set (exact router grads) ----
+    logits = xt.astype(jnp.float32) @ p["w_router"]          # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = lax.top_k(probs, m.top_k)                 # [T, k]
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # aux losses (Switch LB + z-loss), computed where routing is replicated
+    ind = jax.nn.one_hot(top_e[:, 0], m.n_experts)           # primary expert
+    f = ind.mean(0)
+    pr = probs.mean(0)
+    aux = {
+        "lb_loss": m.n_experts * (f * pr).sum() * m.router_aux_weight,
+        "z_loss": (jax.nn.logsumexp(logits, axis=-1) ** 2).mean()
+                  * m.router_z_weight,
+    }
+
+    # ---- token-parallel region over the model axis ----
+    tp = dist.tp
+    tpn = dist.tp_size
+    pad = (-t_full) % tpn
+    if pad:
+        xt = jnp.concatenate([xt, jnp.zeros((pad, d), xt.dtype)])
+        top_w = jnp.concatenate([top_w, jnp.zeros((pad, m.top_k),
+                                                  top_w.dtype)])
+        top_e = jnp.concatenate([top_e, jnp.zeros((pad, m.top_k),
+                                                  top_e.dtype)])
+    xs = tpops.split(xt, tp, dim=0, tag="moe")               # [t, d]
+    ws = tpops.split(top_w, tp, dim=0, tag="moe")
+    es = _split_nograd(top_e, tp, 0)
+    t = xs.shape[0]
+
+    cap = max(1, int(-(-t * m.top_k // m.n_experts) * m.capacity_factor))
+    flat_e = es.reshape(t * m.top_k)
+    flat_w = ws.reshape(t * m.top_k).astype(jnp.float32)
+    oh = jax.nn.one_hot(flat_e, m.n_experts, dtype=jnp.int32)
+    pos = jnp.cumsum(oh, axis=0)[jnp.arange(t * m.top_k), flat_e] - 1
+    keep = (pos < cap).astype(jnp.float32)
+    posc = jnp.clip(pos, 0, cap - 1)
+
+    tok = jnp.repeat(xs, m.top_k, axis=0)                    # [t*k, d]
+    send = jnp.zeros((m.n_experts, cap, d), xs.dtype)
+    send = send.at[flat_e, posc].add(tok * keep[:, None].astype(xs.dtype))
+
+    # a2a: [E, C, d] -> [E_local, tp*C, d]
+    recv = tpops.all_to_all(send, tp, split_axis=0, concat_axis=1, tag="moe")
+    cd = dist.compute_dtype
+    h = jnp.einsum("ecd,edf->ecf", recv.astype(cd), p["we_up"].astype(cd))
+    if cfg.glu:
+        g = jnp.einsum("ecd,edf->ecf", recv.astype(cd),
+                       p["we_gate"].astype(cd))
+        h = act_fn(cfg.act)(g) * h
+    else:
+        h = act_fn(cfg.act)(h)
+    out = jnp.einsum("ecf,efd->ecd", h, p["we_down"].astype(cd))
+    back = tpops.all_to_all(out, tp, split_axis=1, concat_axis=0, tag="moe")
+
+    gathered = back[flat_e, posc] * (keep * flat_w)[:, None].astype(back.dtype)
+    y_loc = gathered.reshape(t, m.top_k, d).sum(axis=1)
+    y = tpops.merge(y_loc, tp, dim=0, tag="moe")
+    if pad:
+        y = y[:t_full]
+    y = y.reshape(b, s, d)
+
+    if m.n_shared_experts:
+        y = y + L.mlp_apply(cfg, dist, p["shared"], x)
+    aux["dropped_frac"] = 1.0 - (keep.mean() if keep.size else 0.0)
+    return y, aux
+
+
+def _moe_apply_ep_data(cfg, dist: Dist, p: Dict[str, Any], x,
+                       ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Serving layout: tokens are data-sharded already; experts live on the
+    'data' axis (all_to_all over data) with the expert ffn width tensor-
+    parallel over 'model'. Cuts resident expert bytes per chip by
+    dp*tp / tp = dp vs. the training layout (DeepSeek-V2 serving fix,
+    EXPERIMENTS.md §Perf)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    t_full = b * s
+    xt = x.reshape(t_full, d)
+    cd = dist.compute_dtype
+
+    logits = xt.astype(jnp.float32) @ p["w_router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = lax.top_k(probs, m.top_k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    aux = {"dropped_frac": jnp.zeros((), jnp.float32)}
+
+    cap = max(1, int(-(-t_full * m.top_k // m.n_experts)
+                     * m.capacity_factor))
+    flat_e = top_e.reshape(t_full * m.top_k)
+    flat_w = top_w.reshape(t_full * m.top_k).astype(jnp.float32)
+    oh = jax.nn.one_hot(flat_e, m.n_experts, dtype=jnp.int32)
+    pos = jnp.cumsum(oh, axis=0)[jnp.arange(t_full * m.top_k), flat_e] - 1
+    keep = (pos < cap).astype(jnp.float32)
+    posc = jnp.clip(pos, 0, cap - 1)
+    tok = jnp.repeat(xt, m.top_k, axis=0)
+    send = jnp.zeros((m.n_experts, cap, d), xt.dtype)
+    send = send.at[flat_e, posc].add(tok * keep[:, None].astype(xt.dtype))
+
+    # a2a over DATA: [E, C, d] -> [E_local, dp*C, d]
+    recv = tpops.all_to_all(send, dist.dp, split_axis=0, concat_axis=1,
+                            tag="moe_ep")
+    rc = tpops.copy_in(recv.astype(cd), dist.tp, tag="moe_ep")
+    h = jnp.einsum("ecd,edf->ecf", rc, p["we_up"].astype(cd))
+    if cfg.glu:
+        g = jnp.einsum("ecd,edf->ecf", rc, p["we_gate"].astype(cd))
+        h = act_fn(cfg.act)(g) * h
+    else:
+        h = act_fn(cfg.act)(h)
+    out = jnp.einsum("ecf,efd->ecd", h, p["we_down"].astype(cd))
+    out = tpops.allreduce(out, dist.tp, tag="moe_ep")   # dff TP reduction
+    back = tpops.all_to_all(out, dist.dp, split_axis=1, concat_axis=0,
+                            tag="moe_ep")
+    gathered = back[flat_e, posc] * (keep * flat_w)[:, None].astype(back.dtype)
+    y = gathered.reshape(t_full, m.top_k, d).sum(axis=1).reshape(b, s, d)
+    if m.n_shared_experts:
+        y = y + L.mlp_apply(cfg, dist, p["shared"], x)
+    aux["dropped_frac"] = 1.0 - (keep.mean() if keep.size else 0.0)
+    return y, aux

@@ -1,0 +1,118 @@
+"""RecurrentGemma / Griffin recurrent block (arXiv:2402.19427): gated linear
+y-branch, causal depthwise conv1d, and the RG-LRU diagonal recurrence:
+
+    r_t = sigmoid(x_t W_r),  i_t = sigmoid(x_t W_i)
+    a_t = exp(-c * softplus(Lambda) * r_t)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+TPU adaptation note (DESIGN.md): Griffin computes the gates from the
+post-conv signal with block-diagonal (per-head) weights; head blocks of 256
+channels do not shard 16 ways, so the gates here are full-width linears of
+the *block input* — channel-exactly shardable (lru_width 2560 / 16 = 160
+per rank), strictly more expressive, recurrence structure unchanged.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core import tpops
+from repro.models.common import Dist, ParamSet, dense_init
+
+C_DECAY = 8.0
+
+
+def rglru_init(key, cfg, tp_size: int, dtype) -> ParamSet:
+    d = cfg.d_model
+    w = cfg.rglru.lru_width or d
+    cw = cfg.rglru.conv1d_width
+    ks = jax.random.split(key, 7)
+    ps = ParamSet()
+    ps.add("w_y", dense_init(ks[0], d, w, dtype), P(None, "model"),
+           fsdp_dim=0)
+    ps.add("w_x", dense_init(ks[1], d, w, dtype), P(None, "model"),
+           fsdp_dim=0)
+    ps.add("conv_w", (jax.random.normal(ks[2], (cw, w)) * cw ** -0.5)
+           .astype(dtype), P(None, "model"))
+    ps.add("conv_b", jnp.zeros((w,), dtype), P("model"))
+    ps.add("w_rgate", dense_init(ks[3], d, w, dtype), P(None, "model"),
+           fsdp_dim=0)
+    ps.add("w_igate", dense_init(ks[4], d, w, dtype), P(None, "model"),
+           fsdp_dim=0)
+    ps.add("b_rgate", jnp.zeros((w,), dtype), P("model"))
+    ps.add("b_igate", jnp.zeros((w,), dtype), P("model"))
+    # Lambda init so a^c in (0.9, 0.999) roughly (Griffin init)
+    ps.add("lam", (jnp.log(jnp.expm1(jnp.linspace(0.9, 4.0, w))))
+           .astype(dtype), P("model"))
+    ps.add("w_out", dense_init(ks[5], w, d, dtype, scale=w ** -0.5),
+           P("model", None), fsdp_dim=1)
+    return ps
+
+
+def _causal_conv1d(u, w, b, tail=None):
+    """Depthwise causal conv. u [B,S,w]; w [cw, w]; tail [B,cw-1,w] (decode).
+    Returns (y [B,S,w], new_tail)."""
+    cw = w.shape[0]
+    if tail is None:
+        pad = jnp.zeros_like(u[:, : cw - 1])
+    else:
+        pad = tail
+    buf = jnp.concatenate([pad, u], axis=1)                  # [B, S+cw-1, w]
+    y = sum(buf[:, i: i + u.shape[1]] * w[i] for i in range(cw)) + b
+    new_tail = buf[:, -(cw - 1):] if cw > 1 else jnp.zeros_like(u[:, :0])
+    return y, new_tail
+
+
+def rglru_apply(cfg, dist: Dist, p: Dict[str, Any], x, *,
+                state: Optional[dict] = None, reduce: bool = True,
+                ) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """state (decode): {"h": [B, w_local], "conv": [B, cw-1, w_local]}."""
+    b, s, d = x.shape
+    cd = dist.compute_dtype
+    h_in = tpops.copy_in(x, dist.tp, tag="rglru")
+    ybr = jax.nn.gelu(h_in @ p["w_y"].astype(cd))
+    u = h_in @ p["w_x"].astype(cd)
+    u, new_tail = _causal_conv1d(u, p["conv_w"].astype(cd),
+                                 p["conv_b"].astype(cd),
+                                 None if state is None else state["conv"])
+    rg = jax.nn.sigmoid(h_in @ p["w_rgate"].astype(cd)
+                        + p["b_rgate"].astype(cd))
+    ig = jax.nn.sigmoid(h_in @ p["w_igate"].astype(cd)
+                        + p["b_igate"].astype(cd))
+    lam = jax.nn.softplus(p["lam"].astype(jnp.float32))
+    log_a = (-C_DECAY * lam * rg.astype(jnp.float32))        # [B,S,wl]
+    a = jnp.exp(log_a)
+    gated = (ig * u).astype(jnp.float32)
+    mult = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+
+    if state is not None:
+        h = a[:, 0] * state["h"].astype(jnp.float32) + mult[:, 0] * gated[:, 0]
+        hs = h[:, None]                                      # [B,1,wl]
+        new_state = {"h": h.astype(cd), "conv": new_tail}
+    else:
+        def step(hprev, inp):
+            a_t, m_t, g_t = inp
+            h_t = a_t * hprev + m_t * g_t
+            return h_t, h_t
+        h0 = jnp.zeros((b, u.shape[-1]), jnp.float32)
+        _, hs = lax.scan(step, h0,
+                         (a.transpose(1, 0, 2), mult.transpose(1, 0, 2),
+                          gated.transpose(1, 0, 2)))
+        hs = hs.transpose(1, 0, 2)
+        new_state = None
+
+    y = (hs.astype(cd) * ybr) @ p["w_out"].astype(cd)
+    if reduce:
+        y = tpops.allreduce(y, dist.tp, tag="rglru_out")
+    return y, new_state
+
+
+def init_rglru_state(cfg, dist: Dist, batch_local: int, dtype=jnp.float32):
+    w = (cfg.rglru.lru_width or cfg.d_model) // dist.tp_size
+    cw = cfg.rglru.conv1d_width
+    return {"h": jnp.zeros((batch_local, w), dtype),
+            "conv": jnp.zeros((batch_local, cw - 1, w), dtype)}

@@ -1,0 +1,210 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free time-mix with
+data-dependent decay + token shift, and relu^2 channel-mix.
+
+TP: heads are padded 40 -> 48 (3/rank at tp=16) with padded heads masked;
+the per-channel mix/LoRA parameters operate on the replicated residual
+stream (exact grads via the copy_in boundary at each projection).
+
+Recurrence per head (state S in R^{hd x hd}):
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+with w_t = exp(-exp(decay_t)) data-dependent per channel.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core import tpops
+from repro.models.common import Dist, ParamSet, dense_init
+
+MIXES = ("w", "k", "v", "r", "g")
+
+
+def _heads_local(cfg, tp_size: int) -> Tuple[int, int]:
+    h_local = -(-cfg.n_heads // tp_size)
+    return h_local, h_local * tp_size
+
+
+def timemix_init(key, cfg, tp_size: int, dtype) -> ParamSet:
+    d = cfg.d_model
+    hs = cfg.rwkv.head_size
+    h_local, hp = _heads_local(cfg, tp_size)
+    width = hp * hs
+    ks = jax.random.split(key, 16)
+    ps = ParamSet()
+    # token-shift mixing (replicated, per-channel)
+    ps.add("maa_x", jnp.zeros((d,), dtype), P())
+    for i, mx in enumerate(MIXES):
+        ps.add(f"maa_{mx}", jnp.zeros((d,), dtype), P())
+    ps.add("tm_w1", dense_init(ks[0], d, 5 * cfg.rwkv.mix_lora, dtype), P())
+    ps.add("tm_w2", (jax.random.normal(ks[1], (5, cfg.rwkv.mix_lora, d))
+                     * cfg.rwkv.mix_lora ** -0.5).astype(dtype), P())
+    # projections (head-sharded)
+    for i, name in enumerate(("wr", "wk", "wv", "wg")):
+        ps.add(name, dense_init(ks[2 + i], d, width, dtype),
+               P(None, "model"), fsdp_dim=0)
+    ps.add("wo", dense_init(ks[6], width, d, dtype), P("model", None),
+           fsdp_dim=1)
+    # data-dependent decay
+    ps.add("w0", jnp.full((width,), -6.0, dtype), P("model"))
+    ps.add("td_w1", dense_init(ks[7], d, cfg.rwkv.decay_lora, dtype), P())
+    ps.add("td_w2", dense_init(ks[8], cfg.rwkv.decay_lora, width, dtype),
+           P(None, "model"), fsdp_dim=0)
+    ps.add("u", jnp.zeros((width,), dtype), P("model"))      # bonus
+    ps.add("gn_scale", jnp.ones((width,), dtype), P("model"))
+    ps.add("gn_bias", jnp.zeros((width,), dtype), P("model"))
+    return ps
+
+
+def _mix_inputs(p, x, xx, cd):
+    """Token-shift mixes for the 5 branches. x, xx [B,S,d]."""
+    delta = xx - x
+    base = x + delta * p["maa_x"].astype(cd)
+    lora = jnp.tanh(base @ p["tm_w1"].astype(cd))
+    b, s, _ = x.shape
+    lora = lora.reshape(b, s, 5, -1)
+    out = []
+    for i, mx in enumerate(MIXES):
+        adj = jnp.einsum("bsl,ld->bsd", lora[:, :, i],
+                         p["tm_w2"][i].astype(cd))
+        out.append(x + delta * (p[f"maa_{mx}"].astype(cd) + adj))
+    return out                                               # xw,xk,xv,xr,xg
+
+
+def _wkv_scan(r, k, v, w, u, state):
+    """r,k,v,w [B,S,h,hs]; u [h,hs]; state [B,h,hs,hs] -> y, new_state."""
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp                             # [B,h,hs]
+        kv = jnp.einsum("bhi,bhj->bhij", k_t, v_t)
+        y = jnp.einsum("bhi,bhij->bhj", r_t, s + u[None, :, :, None] * kv)
+        s = w_t[..., None] * s + kv
+        return s, y
+    xs = jax.tree.map(lambda a: a.transpose(1, 0, 2, 3), (r, k, v, w))
+    state, ys = lax.scan(step, state, xs)
+    return ys.transpose(1, 0, 2, 3), state                   # [B,S,h,hs]
+
+
+def _group_norm(y, scale, bias, hs: int, eps=64e-5):
+    """Per-head layernorm on [B,S,h*hs]."""
+    b, s, width = y.shape
+    yf = y.astype(jnp.float32).reshape(b, s, width // hs, hs)
+    mu = yf.mean(-1, keepdims=True)
+    var = ((yf - mu) ** 2).mean(-1, keepdims=True)
+    yn = ((yf - mu) * jax.lax.rsqrt(var + eps)).reshape(b, s, width)
+    return (yn * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+            ).astype(y.dtype)
+
+
+def timemix_apply(cfg, dist: Dist, p: Dict[str, Any], x, *,
+                  state: Optional[dict] = None, reduce: bool = True,
+                  ) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """state (decode): {"x_prev": [B,d], "s": [B,h_local,hs,hs]}."""
+    b, s, d = x.shape
+    hs = cfg.rwkv.head_size
+    h_local, hp = _heads_local(cfg, dist.tp_size)
+    cd = dist.compute_dtype
+    r_rank = tpops.axis_index(dist.tp)
+
+    if state is not None:
+        xx = state["x_prev"][:, None, :]
+    else:
+        xx = jnp.concatenate([jnp.zeros_like(x[:, :1]), x[:, :-1]], axis=1)
+    # TWO boundaries (x, xx) instead of one per mix branch (5+1): the mixes
+    # are recomputed per-rank (cheap elementwise + LoRA) and the replicated
+    # mix/LoRA params' rank-partial grads get a model-axis psum in the train
+    # step (sharding.apply_replicated_grad_reduction) — cuts the rwkv
+    # boundary bytes by ~2/3 (EXPERIMENTS.md §Perf H4).
+    xc = tpops.copy_in(x, dist.tp, tag="rwkv")
+    xxc = tpops.copy_in(xx, dist.tp, tag="rwkv")
+    xw, xk, xv, xr, xg = _mix_inputs(p, xc, xxc, cd)
+
+    proj = lambda h, w: h @ w.astype(cd)
+    rr = proj(xr, p["wr"]).reshape(b, s, h_local, hs)
+    kk = proj(xk, p["wk"]).reshape(b, s, h_local, hs)
+    vv = proj(xv, p["wv"]).reshape(b, s, h_local, hs)
+    gg = proj(xg, p["wg"])
+    decay = p["w0"].astype(cd) + jnp.tanh(
+        xw @ p["td_w1"].astype(cd)) @ p["td_w2"].astype(cd)
+    w = jnp.exp(-jnp.exp(decay.astype(jnp.float32))).astype(cd)
+    w = w.reshape(b, s, h_local, hs)
+    u = p["u"].astype(cd).reshape(h_local, hs)
+
+    if state is not None:
+        s0 = state["s"]
+        kv = jnp.einsum("bhi,bhj->bhij", kk[:, 0], vv[:, 0])
+        y = jnp.einsum("bhi,bhij->bhj", rr[:, 0],
+                       s0 + u[None, :, :, None] * kv)[:, None]  # [B,1,h,hs]
+        s_new = w[:, 0][..., None] * s0 + kv
+        new_state = {"x_prev": x[:, -1], "s": s_new}
+    else:
+        s0 = jnp.zeros((b, h_local, hs, hs), cd)
+        y, _ = _wkv_scan(rr, kk, vv, w, u, s0)
+        new_state = None
+
+    # mask padded heads
+    valid = (r_rank * h_local + jnp.arange(h_local)) < cfg.n_heads
+    y = y * valid[None, None, :, None].astype(y.dtype)
+    y = y.reshape(b, -1, h_local * hs)
+    y = _group_norm(y, p["gn_scale"], p["gn_bias"], hs)
+    y = y * jax.nn.silu(gg)
+    y = y @ p["wo"].astype(cd)
+    if reduce:
+        y = tpops.allreduce(y, dist.tp, tag="rwkv_out")
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# channel mix
+# ---------------------------------------------------------------------------
+
+def chanmix_init(key, cfg, tp_size: int, dtype) -> ParamSet:
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    ps = ParamSet()
+    ps.add("cm_maa_k", jnp.zeros((d,), dtype), P())
+    ps.add("cm_maa_r", jnp.zeros((d,), dtype), P())
+    ps.add("cm_wk", dense_init(ks[0], d, ff, dtype), P(None, "model"),
+           fsdp_dim=0)
+    ps.add("cm_wv", dense_init(ks[1], ff, d, dtype, scale=ff ** -0.5),
+           P("model", None), fsdp_dim=1)
+    ps.add("cm_wr", dense_init(ks[2], d, d, dtype), P(None, "model"),
+           fsdp_dim=0)
+    return ps
+
+
+def chanmix_apply(cfg, dist: Dist, p, x, *, state: Optional[dict] = None,
+                  ) -> Tuple[jnp.ndarray, Optional[dict]]:
+    b, s, d = x.shape
+    cd = dist.compute_dtype
+    if state is not None:
+        xx = state["x_prev"][:, None, :]
+        new_state = {"x_prev": x[:, -1]}
+    else:
+        xx = jnp.concatenate([jnp.zeros_like(x[:, :1]), x[:, :-1]], axis=1)
+        new_state = None
+    # same two-boundary scheme as the time-mix (see above)
+    xc = tpops.copy_in(x, dist.tp, tag="rwkv_cm")
+    xxc = tpops.copy_in(xx, dist.tp, tag="rwkv_cm")
+    delta = xxc - xc
+    xk = xc + delta * p["cm_maa_k"].astype(cd)
+    xr = xc + delta * p["cm_maa_r"].astype(cd)
+    k = jnp.square(jax.nn.relu(xk @ p["cm_wk"].astype(cd)))
+    kv = tpops.allreduce(k @ p["cm_wv"].astype(cd), dist.tp, tag="rwkv_cm")
+    r_loc = xr @ p["cm_wr"].astype(cd)
+    kv_loc = tpops.split(kv, dist.tp, dim=-1, tag="rwkv_cm")
+    out = jax.nn.sigmoid(r_loc) * kv_loc
+    y = tpops.merge(out, dist.tp, dim=-1, tag="rwkv_cm")
+    return y, new_state
+
+
+def init_rwkv_state(cfg, dist: Dist, batch_local: int, dtype=jnp.float32):
+    hs = cfg.rwkv.head_size
+    h_local, _ = _heads_local(cfg, dist.tp_size)
+    return {"tm": {"x_prev": jnp.zeros((batch_local, cfg.d_model), dtype),
+                   "s": jnp.zeros((batch_local, h_local, hs, hs), dtype)},
+            "cm": {"x_prev": jnp.zeros((batch_local, cfg.d_model), dtype)}}

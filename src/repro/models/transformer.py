@@ -1,0 +1,434 @@
+"""Model assembly: config -> params + forward for train / prefill / decode.
+
+Layers are grouped by the arch's attention pattern period and *stacked*
+(leading group dim) so the layer loop is a ``lax.scan`` — compile time stays
+flat in depth, FSDP can all-gather one group's params per scan step, and
+activation checkpointing wraps the scan body.
+
+Layout: [prologue (first_k_dense, unstacked)] + [G x period stacked] +
+[epilogue (pattern remainder, unstacked)].
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import ledger, tpops
+from repro.models import layers as L
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import rwkv6 as rwkv_mod
+from repro.models.common import Dist, ParamSet, apply_norm, dense_init, norm_init
+
+VIS_DIM = 1024      # stub vision-frontend embedding width
+AUDIO_DIM = 512     # stub audio-frontend (conv feature) width
+
+
+# ---------------------------------------------------------------------------
+# layout plan
+# ---------------------------------------------------------------------------
+
+def _period(cfg) -> int:
+    if cfg.rglru is not None:
+        return len(cfg.rglru.block_pattern)
+    return len(cfg.attn_pattern)
+
+
+def layer_plan(cfg) -> Tuple[List[int], List[int], List[int]]:
+    """-> (prologue_idx, stacked_idx, epilogue_idx) layer indices."""
+    n0 = cfg.moe.first_k_dense if cfg.moe else 0
+    period = _period(cfg)
+    rest = cfg.n_layers - n0
+    g = rest // period
+    stacked = list(range(n0, n0 + g * period))
+    epi = list(range(n0 + g * period, cfg.n_layers))
+    return list(range(n0)), stacked, epi
+
+
+# ---------------------------------------------------------------------------
+# single block
+# ---------------------------------------------------------------------------
+
+def block_init(key, cfg, tp_size: int, dtype, kind: str,
+               is_moe: bool, ep_over_data: bool = False) -> ParamSet:
+    ks = jax.random.split(key, 3)
+    ps = ParamSet()
+    norm_init(ps, "ln1", cfg.d_model, cfg.norm, dtype)
+    if not cfg.parallel_block:
+        norm_init(ps, "ln2", cfg.d_model, cfg.norm, dtype)
+    if kind == "rwkv":
+        ps.merge("mix", rwkv_mod.timemix_init(ks[0], cfg, tp_size, dtype))
+        ps.merge("ffn", rwkv_mod.chanmix_init(ks[1], cfg, tp_size, dtype))
+        return ps
+    if kind == "recurrent":
+        ps.merge("mix", rglru_mod.rglru_init(ks[0], cfg, tp_size, dtype))
+    elif cfg.mla is not None:
+        ps.merge("mix", mla_mod.mla_init(ks[0], cfg, tp_size, dtype))
+    else:
+        ps.merge("mix", L.attn_init(ks[0], cfg, tp_size, dtype))
+    if is_moe:
+        ps.merge("ffn", moe_mod.moe_init(ks[1], cfg, tp_size, dtype,
+                                         ep_over_data=ep_over_data))
+    else:
+        ps.merge("ffn", L.mlp_init(ks[1], cfg, tp_size, dtype))
+    return ps
+
+
+def _mix_apply(cfg, dist, bp, h, *, kind, q_offset, cache, reduce=True):
+    if kind == "rwkv":
+        return rwkv_mod.timemix_apply(
+            cfg, dist, bp["mix"], h,
+            state=None if cache is None else cache["tm"], reduce=reduce)
+    if kind == "recurrent":
+        return rglru_mod.rglru_apply(cfg, dist, bp["mix"], h, state=cache,
+                                     reduce=reduce)
+    if cfg.mla is not None:
+        return mla_mod.mla_apply(cfg, dist, bp["mix"], h, q_offset=q_offset,
+                                 cache=cache, reduce=reduce)
+    return L.attn_apply(cfg, dist, bp["mix"], h, kind=kind,
+                        q_offset=q_offset, cache=cache, reduce=reduce)
+
+
+def sp_eligible(cfg) -> bool:
+    """Sequence parallelism needs plain copy_in/allreduce block structure:
+    GQA attention + dense MLP (MoE/RWKV/RG-LRU/MLA have inner replicated-
+    param consumption whose grad reductions are handled by copy_in)."""
+    return (cfg.rwkv is None and cfg.rglru is None and cfg.mla is None
+            and cfg.moe is None)
+
+
+def block_apply(cfg, dist: Dist, bp, x, *, kind: str, is_moe: bool,
+                q_offset, cache, sp: bool = False
+                ) -> Tuple[jnp.ndarray, dict, Any]:
+    aux: Dict[str, jnp.ndarray] = {}
+    h1 = apply_norm(bp, "ln1", x, cfg.norm)
+    if cfg.parallel_block:
+        if sp:
+            # SP: x (and h1) are seq-sharded; gather full seq for attention,
+            # psum_scatter the partial outputs back (same bytes as the
+            # all-reduce, activations / tp).
+            hf = tpops.sp_gather(h1, dist.tp, dim=1)
+            a, new_cache = L.attn_apply(cfg, dist, bp["mix"], hf, kind=kind,
+                                        q_offset=q_offset, cache=cache,
+                                        reduce=False, copy=False)
+            f = L.mlp_apply(cfg, dist, bp["ffn"], hf, reduce=False,
+                            copy=False)
+            x = x + tpops.sp_scatter(a + f, dist.tp, dim=1)
+            return x, aux, new_cache
+        # one shared copy_in boundary + one fused all-reduce for attn+mlp:
+        # halves both the forward and backward collective bytes of the block.
+        h1c = tpops.copy_in(h1, dist.tp, tag="parallel_block")
+        a, new_cache = L.attn_apply(cfg, dist, bp["mix"], h1c, kind=kind,
+                                    q_offset=q_offset, cache=cache,
+                                    reduce=False, copy=False)
+        f = L.mlp_apply(cfg, dist, bp["ffn"], h1c, reduce=False, copy=False)
+        x = x + tpops.allreduce(a + f, dist.tp, tag="parallel_block")
+        return x, aux, new_cache
+
+    if sp:
+        hf = tpops.sp_gather(h1, dist.tp, dim=1)
+        a, new_cache = L.attn_apply(cfg, dist, bp["mix"], hf, kind=kind,
+                                    q_offset=q_offset, cache=cache,
+                                    reduce=False, copy=False)
+        x = x + tpops.sp_scatter(a, dist.tp, dim=1)
+        h2 = apply_norm(bp, "ln2", x, cfg.norm)
+        hf2 = tpops.sp_gather(h2, dist.tp, dim=1)
+        f = L.mlp_apply(cfg, dist, bp["ffn"], hf2, reduce=False, copy=False)
+        x = x + tpops.sp_scatter(f, dist.tp, dim=1)
+        return x, aux, new_cache
+
+    if kind == "rwkv":
+        a, tm_state = _mix_apply(cfg, dist, bp, h1, kind=kind,
+                                 q_offset=q_offset, cache=cache)
+        x = x + a
+        h2 = apply_norm(bp, "ln2", x, cfg.norm)
+        f, cm_state = rwkv_mod.chanmix_apply(
+            cfg, dist, bp["ffn"], h2,
+            state=None if cache is None else cache["cm"])
+        x = x + f
+        new_cache = None if cache is None else {"tm": tm_state,
+                                                "cm": cm_state}
+        return x, aux, new_cache
+
+    a, new_cache = _mix_apply(cfg, dist, bp, h1, kind=kind,
+                              q_offset=q_offset, cache=cache)
+    x = x + a
+    h2 = apply_norm(bp, "ln2", x, cfg.norm)
+    if is_moe:
+        f, aux = moe_mod.moe_apply(cfg, dist, bp["ffn"], h2)
+    else:
+        f = L.mlp_apply(cfg, dist, bp["ffn"], h2)
+    x = x + f
+    return x, aux, new_cache
+
+
+# ---------------------------------------------------------------------------
+# whole-model params
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg, dist: Dist) -> ParamSet:
+    dtype = dist.param_dtype
+    tp = dist.tp_size
+    kinds = cfg.layer_kinds()
+    moe_mask = cfg.moe_layer_mask()
+    pro, stk, epi = layer_plan(cfg)
+    period = _period(cfg)
+    keys = jax.random.split(key, cfg.n_layers + 4)
+
+    top = ParamSet()
+    top.merge("embed", L.embed_init(keys[-1], cfg, tp, dtype))
+    if cfg.frontend == "vision":
+        fs = ParamSet()
+        fs.add("w_vis", dense_init(keys[-2], VIS_DIM, cfg.d_model, dtype),
+               P())
+        top.merge("frontend", fs)
+    elif cfg.frontend == "audio":
+        fs = ParamSet()
+        fs.add("w_front", dense_init(keys[-2], AUDIO_DIM, cfg.d_model,
+                                     dtype), P())
+        fs.add("mask_emb", jnp.zeros((cfg.d_model,), dtype), P())
+        top.merge("frontend", fs)
+    fn = ParamSet()
+    norm_init(fn, "final", cfg.d_model, cfg.norm, dtype)
+    top.merge("final", fn)
+    if not cfg.tie_embeddings:
+        un = ParamSet()
+        un.add("w_unembed",
+               dense_init(keys[-3], cfg.d_model,
+                          L.padded_vocab(cfg.vocab_size, tp), dtype),
+               P(None, "model"))
+        top.merge("unembed", un)
+
+    def mk(i, k):
+        return block_init(k, cfg, tp, dtype, kinds[i], moe_mask[i],
+                          ep_over_data=dist.ep_over_data)
+
+    for tag, idxs in (("prologue", pro), ("epilogue", epi)):
+        sub = ParamSet()
+        for j, i in enumerate(idxs):
+            sub.merge(str(j), mk(i, keys[i]))
+        top.merge(tag, sub)
+
+    g = len(stk) // period
+    blocks = ParamSet()
+    for pos in range(period):
+        per_group = [mk(stk[gi * period + pos], keys[stk[gi * period + pos]])
+                     for gi in range(g)]
+        proto = per_group[0]
+        sub = ParamSet()
+        sub.params = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                  *[b.params for b in per_group])
+        sub.specs = jax.tree.map(_stack_spec, proto.specs,
+                                 is_leaf=_is_spec)
+        sub.stacked = jax.tree.map(lambda _: True, proto.stacked)
+        sub.kvdup = proto.kvdup
+        sub.fsdp_dim = proto.fsdp_dim
+        blocks.merge(f"pos{pos}", sub)
+    top.merge("blocks", blocks)
+    apply_fsdp_specs(top, dist)
+    if dist.tp is None:
+        # TP-replicate mode: model code emits no model-axis collectives, so
+        # every param must be replicated over the model axis too.
+        top.specs = jax.tree.map(
+            lambda sp: P(*[None if a == "model" else a for a in sp]),
+            top.specs, is_leaf=_is_spec)
+    return top
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, P)
+
+
+def _stack_spec(spec: P) -> P:
+    return P(*([None] + list(spec)))
+
+
+def apply_fsdp_specs(pset: ParamSet, dist: Dist) -> None:
+    """Insert the 'data' axis into stacked-leaf specs at fsdp_dim (in-place)."""
+    if not dist.fsdp:
+        return
+    def upd(spec, stacked, fd):
+        if not stacked or fd is None or (isinstance(fd, int) and fd < 0):
+            return spec
+        parts = list(spec)
+        while len(parts) <= fd + 1:
+            parts.append(None)
+        assert parts[fd + 1] is None, (spec, fd)
+        parts[fd + 1] = "data"
+        return P(*parts)
+    pset.specs = jax.tree.map(upd, pset.specs, pset.stacked, pset.fsdp_dim,
+                              is_leaf=_is_spec)
+
+
+def _gather_group(gp, fsdp_dims, dist: Dist):
+    if not dist.fsdp:
+        return gp
+    return jax.tree.map(
+        lambda p, fd: (tpops.fsdp_gather(p, dist.dp, fd)
+                       if isinstance(fd, int) and fd >= 0 else p),
+        gp, fsdp_dims)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def embed_inputs(cfg, dist: Dist, params, batch):
+    cd = dist.compute_dtype
+    if cfg.frontend == "vision" and "patch_embeds" in batch:
+        pe = batch["patch_embeds"].astype(cd) @ \
+            params["frontend"]["w_vis"].astype(cd)
+        te = L.embed_lookup(cfg, dist, params["embed"]["wemb"],
+                            batch["tokens"])
+        return jnp.concatenate([pe, te], axis=1)
+    if cfg.frontend == "audio":
+        fr = batch["frames"].astype(cd) @ \
+            params["frontend"]["w_front"].astype(cd)
+        msk = batch["mask"][..., None]
+        return jnp.where(msk, params["frontend"]["mask_emb"].astype(cd), fr)
+    return L.embed_lookup(cfg, dist, params["embed"]["wemb"],
+                          batch["tokens"])
+
+
+def forward(cfg, dist: Dist, params, batch, *, caches=None, q_offset=0,
+            fsdp_dims=None):
+    """Shared trunk. Returns (hidden [B,S,d], aux, new_caches).
+
+    ``fsdp_dims``: the ParamSet.fsdp_dim subtree for params (required when
+    dist.fsdp so the scan body knows which leaves to all-gather).
+    """
+    kinds = cfg.layer_kinds()
+    moe_mask = cfg.moe_layer_mask()
+    pro, stk, epi = layer_plan(cfg)
+    period = _period(cfg)
+    g = len(stk) // period
+
+    x = embed_inputs(cfg, dist, params, batch)
+    sp = (dist.seq_parallel and caches is None and sp_eligible(cfg)
+          and dist.tp is not None and dist.tp_size > 1
+          and x.shape[1] % dist.tp_size == 0)
+    if sp:
+        x = tpops.split(x, dist.tp, dim=1, tag="sp_in")
+    aux_tot: Dict[str, jnp.ndarray] = {}
+    new_caches: Dict[str, Any] = {} if caches is None else \
+        {"prologue": {}, "epilogue": {}}
+
+    def run_plain(tag, idxs, x):
+        for j, i in enumerate(idxs):
+            c = None if caches is None else caches[tag][str(j)]
+            bp = params[tag][str(j)]
+            if dist.fsdp and fsdp_dims is not None:
+                # prologue/epilogue params are not stacked: no gather
+                pass
+            x, aux, nc = block_apply(cfg, dist, bp, x, kind=kinds[i],
+                                     is_moe=moe_mask[i], q_offset=q_offset,
+                                     cache=c, sp=sp)
+            for k, v in aux.items():
+                aux_tot[k] = aux_tot.get(k, 0.0) + v
+            if caches is not None:
+                new_caches.setdefault(tag, {})[str(j)] = nc
+        return x
+
+    x = run_plain("prologue", pro, x)
+
+    if g > 0:
+        pos_params = [params["blocks"][f"pos{p}"] for p in range(period)]
+        pos_fsdp = (None if fsdp_dims is None else
+                    [fsdp_dims["blocks"][f"pos{p}"] for p in range(period)])
+        stk_kinds = [kinds[stk[p]] for p in range(period)]
+        stk_moe = [moe_mask[stk[p]] for p in range(period)]
+        c_stk = None if caches is None else caches["blocks"]
+
+        def body(carry, xs):
+            (x,) = carry
+            gp, gc = xs
+            nc_list = []
+            auxs: Dict[str, jnp.ndarray] = {}
+            for p in range(period):
+                gpp = (gp[p] if pos_fsdp is None
+                       else _gather_group(gp[p], pos_fsdp[p], dist))
+                x, aux, nc = block_apply(
+                    cfg, dist, gpp, x, kind=stk_kinds[p], is_moe=stk_moe[p],
+                    q_offset=q_offset,
+                    cache=None if gc is None else gc[p], sp=sp)
+                for k, v in aux.items():
+                    auxs[k] = auxs.get(k, 0.0) + v
+                nc_list.append(nc)
+            return (x,), (tuple(nc_list) if gc is not None else (), auxs)
+
+        if cfg.remat == "full":
+            body = jax.checkpoint(body)
+        with ledger.loop(g):
+            (x,), (nc_stk, auxs) = jax.lax.scan(
+                body, (x,), (pos_params, c_stk))
+        for k, v in auxs.items():
+            aux_tot[k] = aux_tot.get(k, 0.0) + v.sum()
+        if caches is not None:
+            new_caches["blocks"] = nc_stk
+
+    x = run_plain("epilogue", epi, x)
+    if sp:
+        x = tpops.merge(x, dist.tp, dim=1, tag="sp_out")
+    x = apply_norm(params["final"], "final", x, cfg.norm)
+    return x, aux_tot, (new_caches if caches is not None else None)
+
+
+def unembed_logits(cfg, dist: Dist, params, x):
+    w = (params["embed"]["wemb"].T if cfg.tie_embeddings
+         else params["unembed"]["w_unembed"])
+    h = tpops.copy_in(x, dist.tp, tag="unembed")
+    return h @ w.astype(dist.compute_dtype)
+
+
+CE_CHUNK_ELEMS = 1 << 22     # max live logits elements per CE chunk
+
+
+def _chunked_ce(cfg, dist, params, x, labels):
+    """CE with the [tokens, vocab] logits computed in seq chunks under
+    jax.checkpoint: peak logits memory drops from tokens*vloc to
+    chunk*vloc (the f32 logits buffer dominated small-model / big-vocab
+    training memory — EXPERIMENTS.md §Perf)."""
+    b, s, d = x.shape
+    vloc = L.padded_vocab(cfg.vocab_size, dist.tp_size) // dist.tp_size
+    if b * s * vloc <= CE_CHUNK_ELEMS or s % 2:
+        logits = unembed_logits(cfg, dist, params, x)
+        return L.sharded_xent(cfg, dist, logits, labels)
+    c = max(1, CE_CHUNK_ELEMS // (b * vloc))
+    while s % c:
+        c //= 2
+    c = max(c, 1)
+    nc = s // c
+    xs = x.reshape(b, nc, c, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(b, nc, c).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def chunk(carry, inp):
+        xc, lc = inp
+        logits = unembed_logits(cfg, dist, params, xc)
+        nll, w = L.sharded_xent_parts(cfg, dist, logits, lc)
+        return (carry[0] + nll, carry[1] + w), None
+
+    with ledger.loop(nc):
+        (nll, w), _ = jax.lax.scan(
+            chunk, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+            (xs, ls))
+    return nll / jnp.maximum(w, 1.0)
+
+
+def loss_fn(cfg, dist: Dist, params, batch, *, fsdp_dims=None):
+    """Training loss (mean CE over labelled tokens) + metrics."""
+    x, aux, _ = forward(cfg, dist, params, batch, fsdp_dims=fsdp_dims)
+    labels = batch["labels"]
+    loss = _chunked_ce(cfg, dist, params, x, labels)
+    total = loss
+    metrics = {"ce_loss": loss}
+    for k in ("lb_loss", "z_loss"):
+        if k in aux:
+            total = total + aux[k]
+            metrics[k] = aux[k]
+    metrics["loss"] = total
+    return total, metrics

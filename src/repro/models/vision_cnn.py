@@ -1,0 +1,184 @@
+"""The paper's own models: AlexNet and ResNet (He 2016) in pure JAX.
+
+Used by the faithful-reproduction experiments (Table I compression ratios,
+Fig 5/6 convergence) in data-parallel mode — exactly the paper's setup
+(each node holds the full model; IWP rides the data-parallel ring). No
+tensor parallelism; NHWC layout; BatchNorm replaced by GroupNorm so the
+train step is batch-independent across data shards (noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ParamSet
+
+
+def _conv_init(key, kh, kw, cin, cout, dtype=jnp.float32):
+    fan = kh * kw * cin
+    return (jax.random.normal(key, (kh, kw, cin, cout)) *
+            (2.0 / fan) ** 0.5).astype(dtype)
+
+
+def _conv(x, w, stride=1, padding="SAME"):
+    return lax.conv_general_dilated(
+        x, w, (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _groupnorm(x, scale, bias, groups=8, eps=1e-5):
+    b, h, w, c = x.shape
+    g = min(groups, c)
+    xf = x.astype(jnp.float32).reshape(b, h, w, g, c // g)
+    mu = xf.mean((1, 2, 4), keepdims=True)
+    var = ((xf - mu) ** 2).mean((1, 2, 4), keepdims=True)
+    y = ((xf - mu) * jax.lax.rsqrt(var + eps)).reshape(b, h, w, c)
+    return (y * scale + bias).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# AlexNet
+# ---------------------------------------------------------------------------
+
+ALEX_SPEC = [  # (k, cout, stride, pool)
+    (11, 64, 4, True), (5, 192, 1, True), (3, 384, 1, False),
+    (3, 256, 1, False), (3, 256, 1, True)]
+
+
+def alexnet_init(key, cfg) -> ParamSet:
+    ps = ParamSet()
+    w = cfg.width / 64.0
+    cin = 3
+    ks = jax.random.split(key, len(ALEX_SPEC) + 3)
+    for i, (k, cout, st, pool) in enumerate(ALEX_SPEC):
+        cout = max(16, int(cout * w))
+        ps.add(f"conv{i}", _conv_init(ks[i], k, k, cin, cout), P())
+        ps.add(f"gn{i}_s", jnp.ones((cout,)), P())
+        ps.add(f"gn{i}_b", jnp.zeros((cout,)), P())
+        cin = cout
+    feat = cin * 36 if cfg.image_size >= 224 else cin
+    hidden = max(64, int(4096 * w))
+    ps.add("fc1", (jax.random.normal(ks[-3], (feat, hidden)) *
+                   feat ** -0.5), P())
+    ps.add("fc2", (jax.random.normal(ks[-2], (hidden, hidden)) *
+                   hidden ** -0.5), P())
+    ps.add("head", (jax.random.normal(ks[-1], (hidden, cfg.n_classes)) *
+                    hidden ** -0.5), P())
+    return ps
+
+
+def alexnet_apply(cfg, p: Dict[str, Any], x):
+    w = cfg.width / 64.0
+    for i, (k, cout, st, pool) in enumerate(ALEX_SPEC):
+        x = _conv(x, p[f"conv{i}"], stride=st)
+        x = _groupnorm(x, p[f"gn{i}_s"], p[f"gn{i}_b"])
+        x = jax.nn.relu(x)
+        if pool and min(x.shape[1:3]) >= 2:
+            x = lax.reduce_window(x, -jnp.inf, lax.max, (1, 3, 3, 1),
+                                  (1, 2, 2, 1), "SAME")
+    if cfg.image_size >= 224:
+        x = jax.image.resize(x, (x.shape[0], 6, 6, x.shape[3]), "linear")
+        x = x.reshape(x.shape[0], -1)
+    else:
+        x = x.mean((1, 2))
+    x = jax.nn.relu(x @ p["fc1"])
+    x = jax.nn.relu(x @ p["fc2"])
+    return x @ p["head"]
+
+
+# ---------------------------------------------------------------------------
+# ResNet (bottleneck for depth>=50, basic otherwise)
+# ---------------------------------------------------------------------------
+
+STAGES = {18: (2, 2, 2, 2), 20: (3, 3, 3), 50: (3, 4, 6, 3),
+          101: (3, 4, 23, 3)}
+
+
+def resnet_init(key, cfg) -> ParamSet:
+    ps = ParamSet()
+    stages = STAGES[cfg.depth]
+    bottleneck = cfg.depth >= 50
+    width = cfg.width
+    ks = iter(jax.random.split(key, 4 * sum(stages) * 4 + 8))
+    stem_k = 7 if cfg.image_size >= 224 else 3
+    ps.add("stem", _conv_init(next(ks), stem_k, stem_k, 3, width), P())
+    ps.add("stem_gn_s", jnp.ones((width,)), P())
+    ps.add("stem_gn_b", jnp.zeros((width,)), P())
+    cin = width
+    for si, n in enumerate(stages):
+        cmid = width * (2 ** si)
+        cout = cmid * (4 if bottleneck else 1)
+        for bi in range(n):
+            pre = f"s{si}b{bi}"
+            if bottleneck:
+                ps.add(f"{pre}_c1", _conv_init(next(ks), 1, 1, cin, cmid), P())
+                ps.add(f"{pre}_c2", _conv_init(next(ks), 3, 3, cmid, cmid), P())
+                ps.add(f"{pre}_c3", _conv_init(next(ks), 1, 1, cmid, cout), P())
+            else:
+                ps.add(f"{pre}_c1", _conv_init(next(ks), 3, 3, cin, cmid), P())
+                ps.add(f"{pre}_c2", _conv_init(next(ks), 3, 3, cmid, cout), P())
+            for j in range(3 if bottleneck else 2):
+                c = cmid if j < (2 if bottleneck else 1) else cout
+                ps.add(f"{pre}_gn{j}_s", jnp.ones((c,)), P())
+                ps.add(f"{pre}_gn{j}_b", jnp.zeros((c,)), P())
+            if bi == 0 and cin != cout:
+                ps.add(f"{pre}_proj", _conv_init(next(ks), 1, 1, cin, cout),
+                       P())
+            cin = cout
+    ps.add("head", (jax.random.normal(next(ks), (cin, cfg.n_classes)) *
+                    cin ** -0.5), P())
+    return ps
+
+
+def resnet_apply(cfg, p: Dict[str, Any], x):
+    stages = STAGES[cfg.depth]
+    bottleneck = cfg.depth >= 50
+    x = _conv(x, p["stem"], stride=2 if cfg.image_size >= 224 else 1)
+    x = jax.nn.relu(_groupnorm(x, p["stem_gn_s"], p["stem_gn_b"]))
+    if cfg.image_size >= 224:
+        x = lax.reduce_window(x, -jnp.inf, lax.max, (1, 3, 3, 1),
+                              (1, 2, 2, 1), "SAME")
+    for si, n in enumerate(stages):
+        for bi in range(n):
+            pre = f"s{si}b{bi}"
+            stride = 2 if (bi == 0 and si > 0) else 1
+            sc = x
+            if f"{pre}_proj" in p:
+                sc = _conv(sc, p[f"{pre}_proj"], stride=stride)
+            elif stride > 1:
+                sc = sc[:, ::stride, ::stride]
+            h = x
+            convs = ["_c1", "_c2", "_c3"] if bottleneck else ["_c1", "_c2"]
+            for j, cname in enumerate(convs):
+                st = stride if j == (1 if bottleneck else 0) else 1
+                h = _conv(h, p[pre + cname], stride=st)
+                h = _groupnorm(h, p[f"{pre}_gn{j}_s"], p[f"{pre}_gn{j}_b"])
+                if j < len(convs) - 1:
+                    h = jax.nn.relu(h)
+            x = jax.nn.relu(h + sc)
+    x = x.mean((1, 2))
+    return x @ p["head"]
+
+
+def cnn_init(key, cfg) -> ParamSet:
+    return alexnet_init(key, cfg) if cfg.kind == "alexnet" \
+        else resnet_init(key, cfg)
+
+
+def cnn_apply(cfg, p, x):
+    return alexnet_apply(cfg, p, x) if cfg.kind == "alexnet" \
+        else resnet_apply(cfg, p, x)
+
+
+def cnn_loss(cfg, p, batch):
+    logits = cnn_apply(cfg, p, batch["images"])
+    labels = batch["labels"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    lt = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    loss = (lse - lt).mean()
+    acc = (logits.argmax(-1) == labels).mean()
+    return loss, {"loss": loss, "acc": acc}

@@ -1,0 +1,4 @@
+"""Optimizers (built in-repo: no optax offline)."""
+from repro.optim.sgd import SGDConfig, sgd_init, sgd_update, clip_by_global_norm
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.schedule import warmup_cosine, warmup_linear

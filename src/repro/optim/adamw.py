@@ -1,0 +1,44 @@
+"""AdamW for the LLM pretraining baselines."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+
+
+def adamw_init(params):
+    z = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig, lr=None):
+    lr = cfg.lr if lr is None else lr
+    t = state["t"] + 1
+    b1t = 1.0 - cfg.b1 ** t.astype(jnp.float32)
+    b2t = 1.0 - cfg.b2 ** t.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m / b1t
+        vh = v / b2t
+        step = mh / (jnp.sqrt(vh) + cfg.eps) \
+            + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    get = lambda i: jax.tree.map(lambda o: o[i], out,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+    return get(0), {"m": get(1), "v": get(2), "t": t}

@@ -1,0 +1,65 @@
+"""Momentum SGD (paper Eq. 1) with local gradient clipping.
+
+Note the division of labour with the compressor: when the sync strategy is
+``iwp_*``, momentum correction already happened *inside* the error-feedback
+accumulator (Eq. 3), so the optimizer momentum must be OFF (m=0) for the
+compressed path — matching the paper, where ``SGD(w, G~)`` consumes the
+ring-reduced sparse gradient directly. The baseline (dense) path uses
+ordinary momentum here.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class SGDConfig:
+    lr: float = 0.1
+    momentum: float = 0.9
+    weight_decay: float = 0.0
+    nesterov: bool = False
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    """Local gradient clipping (paper / DGC warm-up trick)."""
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), gn
+
+
+def sgd_init(params, momentum: float = 0.9):
+    if momentum == 0.0:
+        # compressed-sync path: momentum lives in the error-feedback
+        # accumulator (Eq. 3); skip the (param-sized, all-zero) buffer.
+        return {"mu": None}
+    return {"mu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                               params)}
+
+
+def sgd_update(params, grads, state, cfg: SGDConfig, lr=None):
+    lr = cfg.lr if lr is None else lr
+    if cfg.momentum == 0.0 or state.get("mu") is None:
+        def upd0(p, g):
+            g = g.astype(jnp.float32)
+            if cfg.weight_decay:
+                g = g + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * g).astype(p.dtype)
+        return jax.tree.map(upd0, params, grads), {"mu": None}
+
+    def upd(p, g, mu):
+        g = g.astype(jnp.float32)
+        if cfg.weight_decay:
+            g = g + cfg.weight_decay * p.astype(jnp.float32)
+        mu = cfg.momentum * mu + g
+        step = (g + cfg.momentum * mu) if cfg.nesterov else mu
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), mu
+    out = jax.tree.map(upd, params, grads, state["mu"])
+    new_params = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda o: o[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"mu": new_mu}

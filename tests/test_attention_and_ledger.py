@@ -1,0 +1,101 @@
+"""Pure-JAX attention paths (blocked == full == decode) and the collective
+byte ledger."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ledger
+from repro.models import attention as A
+
+RNG = np.random.default_rng(3)
+
+
+def _qkv(b=2, h=4, kvh=2, sq=96, sk=96, d=32):
+    q = jnp.asarray(RNG.normal(size=(b, h, sq, d)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(b, kvh, sk, d)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(b, kvh, sk, d)), jnp.float32)
+    return q, k, v
+
+
+@pytest.mark.parametrize("kw", [dict(causal=True),
+                                dict(causal=True, window=17),
+                                dict(causal=True, chunk=32),
+                                dict(causal=False)])
+@pytest.mark.parametrize("sq", [96, 130])
+def test_blocked_equals_full(kw, sq):
+    q, k, v = _qkv(sq=sq, sk=sq)
+    full = A.full_attention(q, k, v, **kw)
+    blk = A.blocked_attention(q, k, v, block_q=32, block_k=32, **kw)
+    np.testing.assert_allclose(np.asarray(blk), np.asarray(full), atol=2e-5)
+
+
+def test_decode_equals_full_last_token():
+    q, k, v = _qkv(sq=40, sk=40)
+    full = A.full_attention(q, k, v, causal=True)
+    out = A.decode_attention(q[:, :, -1:], k, v, t=40)
+    np.testing.assert_allclose(np.asarray(out)[:, :, 0],
+                               np.asarray(full)[:, :, -1], atol=2e-5)
+
+
+def test_decode_window_and_chunk_masks():
+    q, k, v = _qkv(sq=40, sk=40)
+    fw = A.full_attention(q, k, v, causal=True, window=8)
+    out = A.decode_attention(q[:, :, -1:], k, v, t=40, window=8)
+    np.testing.assert_allclose(np.asarray(out)[:, :, 0],
+                               np.asarray(fw)[:, :, -1], atol=2e-5)
+    fc = A.full_attention(q, k, v, causal=True, chunk=16)
+    outc = A.decode_attention(q[:, :, -1:], k, v, t=40, chunk=16)
+    np.testing.assert_allclose(np.asarray(outc)[:, :, 0],
+                               np.asarray(fc)[:, :, -1], atol=2e-5)
+
+
+def test_decode_ring_buffer_positions():
+    """Ring-buffer cache: unordered slots + position ids must equal ordered
+    full attention over the last `window` tokens."""
+    b, h, kvh, d, t, w = 1, 2, 2, 16, 23, 8
+    ks = jnp.asarray(RNG.normal(size=(b, kvh, t, d)), jnp.float32)
+    vs = jnp.asarray(RNG.normal(size=(b, kvh, t, d)), jnp.float32)
+    q = jnp.asarray(RNG.normal(size=(b, h, 1, d)), jnp.float32)
+    # build ring buffer of the last w tokens, rotated
+    slots = [(i % w) for i in range(t)]
+    kr = jnp.zeros((b, kvh, w, d))
+    vr = jnp.zeros((b, kvh, w, d))
+    pos = jnp.full((w,), -1, jnp.int32)
+    for i in range(t):
+        kr = kr.at[:, :, slots[i]].set(ks[:, :, i])
+        vr = vr.at[:, :, slots[i]].set(vs[:, :, i])
+        pos = pos.at[slots[i]].set(i)
+    got = A.decode_attention(q, kr, vr, t=t, window=w, positions=pos)
+    want = A.full_attention(q, ks[:, :, t - w:], vs[:, :, t - w:],
+                            causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# ledger
+# ---------------------------------------------------------------------------
+
+def test_ledger_loop_multipliers_and_totals():
+    led = ledger.Ledger()
+    with ledger.use(led):
+        ledger.record("all_reduce", "model", 10.0, 5.0, "a")
+        with ledger.loop(4):
+            ledger.record("ppermute", "data", 2.0, 0.0, "b")
+            with ledger.loop(3):
+                ledger.record("all_gather", "data", 1.0, 1.0, "c")
+    t_fwd = led.totals(include_bwd=False)
+    t_all = led.totals(include_bwd=True)
+    assert t_fwd["all_reduce"] == 10.0
+    assert t_fwd["ppermute"] == 8.0
+    assert t_fwd["all_gather"] == 12.0
+    assert t_all["all_reduce"] == 15.0
+    assert t_all["all_gather"] == 24.0
+    assert led.by_axis(True)["data"] == 8.0 + 24.0
+    assert led.by_tag(False)["c"] == 12.0
+
+
+def test_ledger_inactive_noop():
+    ledger.record("all_reduce", "model", 1e9)   # no active ledger: no crash
+    with ledger.loop(5):
+        pass

@@ -1,0 +1,110 @@
+"""Error-feedback compressor invariants (single rank; ring behaviour is
+covered by tests/test_distributed.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compressor
+from repro.core.compressor import IWPConfig
+from repro.core.flatten import make_flat_spec, flatten_tree
+
+
+def _setup(nb=24, block=64, seed=0):
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.normal(size=(nb, block)).astype(np.float32))
+    w = jnp.asarray((rng.normal(size=(nb, block)) + 0.2).astype(np.float32))
+    tree = {"p": np.zeros(nb * block, np.float32)}
+    spec = make_flat_spec(tree, block)
+    return g, w, spec
+
+
+@pytest.mark.parametrize("m", [0.0, 0.9])
+def test_accounting_invariant(m):
+    """sent payload + residual == m*acc + g exactly (Eq. 3 bookkeeping)."""
+    g, w, spec = _setup()
+    cfg = IWPConfig(block=spec.block, ratio=0.25, threshold=0.01,
+                    selectors=2, momentum=m)
+    acc0 = jnp.asarray(np.random.default_rng(1).normal(
+        size=(spec.n_blocks, spec.block)).astype(np.float32))
+    payload, idx, weight, new_acc, stats = compressor.compress(
+        acc0, g, w, cfg, spec, jax.random.PRNGKey(0), (None,))
+    corrected = m * acc0 + g
+    recon = compressor.decompress(payload, idx, spec) + new_acc
+    np.testing.assert_allclose(np.asarray(recon), np.asarray(corrected),
+                               atol=1e-5)
+    # sent blocks are zeroed in the residual
+    sent = np.unique(np.asarray(idx)[np.asarray(weight) > 0])
+    assert np.abs(np.asarray(new_acc)[sent]).max() == 0.0
+
+
+def test_unsent_blocks_accumulate():
+    g, w, spec = _setup()
+    cfg = IWPConfig(block=spec.block, ratio=2 / spec.n_blocks, threshold=1e9,
+                    selectors=1, momentum=0.9)
+    acc = compressor.init_acc(spec)
+    for step in range(3):
+        payload, idx, weight, acc, _ = compressor.compress(
+            acc, g, w, cfg, spec, jax.random.PRNGKey(step), (None,))
+    # with a huge threshold almost nothing is admitted by importance, but
+    # the static budget still ships k blocks; everything else accumulated:
+    sent_total = compressor.decompress(payload, idx, spec)
+    assert np.isfinite(np.asarray(acc)).all()
+
+
+@given(nb=st.integers(4, 40), ratio=st.sampled_from([0.1, 0.25, 0.5]))
+@settings(max_examples=15, deadline=None)
+def test_wire_budget_static(nb, ratio):
+    block = 32
+    rng = np.random.default_rng(nb)
+    g = jnp.asarray(rng.normal(size=(nb, block)).astype(np.float32))
+    w = jnp.ones((nb, block), jnp.float32)
+    spec = make_flat_spec({"p": np.zeros(nb * block, np.float32)}, block)
+    cfg = IWPConfig(block=block, ratio=ratio, selectors=2)
+    k = cfg.k_blocks(spec.n_blocks)
+    payload, idx, weight, _, stats = compressor.compress(
+        compressor.init_acc(spec), g, w, cfg, spec,
+        jax.random.PRNGKey(0), (None,))
+    assert payload.shape == (k, block)
+    assert idx.shape == (k,)
+    assert (np.asarray(idx) < spec.n_blocks).all()
+    assert float(stats["wire_density"]) == pytest.approx(k / spec.n_blocks)
+
+
+def test_decompress_zero_weight_dups():
+    _, _, spec = _setup(nb=10, block=8)
+    idx = jnp.asarray([2, 2, 5], jnp.int32)
+    pay = jnp.asarray(np.ones((3, 8), np.float32))
+    pay = pay.at[0].set(0.0)       # all-but-last dup zeroed upstream
+    dense = compressor.decompress(pay, idx, spec)
+    np.testing.assert_allclose(np.asarray(dense)[2], np.ones(8))
+
+
+def test_error_feedback_multistep_invariant():
+    """Over k steps with momentum m, (all sent payloads) + final residual
+    must equal the momentum-weighted sum of all gradients — nothing is ever
+    lost or double-counted by the compressor (Eq. 2/3 trajectory)."""
+    nb, block, m, steps = 20, 32, 0.9, 6
+    rng = np.random.default_rng(7)
+    w = jnp.asarray((rng.normal(size=(nb, block)) + 0.3).astype(np.float32))
+    spec = make_flat_spec({"p": np.zeros(nb * block, np.float32)}, block)
+    cfg = IWPConfig(block=block, ratio=0.2, threshold=0.01, selectors=2,
+                    momentum=m)
+    acc = compressor.init_acc(spec)
+    sent_total = jnp.zeros((nb, block), jnp.float32)
+    grads = [jnp.asarray(rng.normal(size=(nb, block)).astype(np.float32))
+             for _ in range(steps)]
+    # reference trajectory: acc evolves as m*acc+g with sent parts removed;
+    # invariant: sum over time of (m^0-weighted future...) — simplest exact
+    # statement: replay the recursion with dense bookkeeping.
+    ref_acc = jnp.zeros((nb, block), jnp.float32)
+    for t in range(steps):
+        payload, idx, weight, acc, _ = compressor.compress(
+            acc, grads[t], w, cfg, spec, jax.random.PRNGKey(t), (None,))
+        dense_sent = compressor.decompress(payload, idx, spec)
+        sent_total = sent_total + dense_sent
+        ref_acc = m * ref_acc + grads[t] - dense_sent
+    np.testing.assert_allclose(np.asarray(acc), np.asarray(ref_acc),
+                               atol=1e-4)
+    assert float(jnp.abs(sent_total).sum()) > 0.0   # something was shipped

@@ -1,0 +1,131 @@
+"""Unit + property tests for the paper's core algorithm pieces."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import importance, masks, metrics
+from repro.core.flatten import make_flat_spec, flatten_tree, unflatten_tree
+
+
+# ---------------------------------------------------------------------------
+# importance
+# ---------------------------------------------------------------------------
+
+def test_block_scores_known():
+    g = jnp.array([[1.0, -2.0], [0.0, 0.0]])
+    w = jnp.array([[1.0, 1.0], [2.0, 2.0]])
+    s = importance.block_scores(g, w, eps=0.0)
+    np.testing.assert_allclose(s, [1.5, 0.0])
+
+
+def test_layerwise_threshold_branches():
+    mean = jnp.array([1.0, 1.0])
+    var = jnp.array([4.0, 0.25])     # var/mean = 4 (> C), 0.25 (< C)
+    thr = importance.layerwise_threshold(mean, var, alpha=0.1, beta=0.01,
+                                         c=1.0)
+    assert thr[0] > 0.1              # disordered layer: higher threshold
+    assert thr[1] < 0.1              # important layer: lower threshold
+    assert (thr > 0).all()
+
+
+def test_random_admission_probability():
+    """P(eff > 1) should equal min(1, score/thr) (paper §III-C)."""
+    n = 20000
+    scores = jnp.full((n,), 0.3)
+    thr = jnp.full((n,), 1.0)
+    eff = importance.effective_scores(scores, thr, jax.random.PRNGKey(0))
+    frac = float((eff > 1.0).mean())
+    assert abs(frac - 0.3) < 0.02
+
+
+@given(nb=st.integers(1, 200))
+@settings(max_examples=20, deadline=None)
+def test_scores_nonnegative(nb):
+    g = jnp.asarray(np.random.default_rng(nb).normal(size=(nb, 16)))
+    w = jnp.asarray(np.random.default_rng(nb + 1).normal(size=(nb, 16)))
+    s = importance.block_scores(g, w)
+    assert (np.asarray(s) >= 0).all() and np.isfinite(np.asarray(s)).all()
+
+
+# ---------------------------------------------------------------------------
+# masks
+# ---------------------------------------------------------------------------
+
+@given(n=st.integers(1, 300), seed=st.integers(0, 10))
+@settings(max_examples=25, deadline=None)
+def test_mask_uint8_roundtrip(n, seed):
+    m = np.random.default_rng(seed).random(n) > 0.5
+    packed = masks.pack_mask_uint8(jnp.asarray(m))
+    assert packed.dtype == jnp.uint8
+    assert packed.shape[0] == -(-n // 8)
+    got = masks.unpack_mask_uint8(packed, n)
+    np.testing.assert_array_equal(np.asarray(got), m)
+
+
+def test_agree_indices_single_rank():
+    eff = jnp.asarray(np.random.default_rng(0).random(64))
+    idx, w = masks.agree_indices(eff, 8, (None,), jax.random.PRNGKey(0), 4)
+    assert idx.shape == (8,) and w.shape == (8,)
+    assert (np.diff(np.asarray(idx)) >= 0).all()          # sorted
+    # weights zero all-but-last duplicate
+    i = np.asarray(idx)
+    wv = np.asarray(w)
+    for a in range(7):
+        if i[a] == i[a + 1]:
+            assert wv[a] == 0.0
+
+
+def test_choose_selectors_distinct():
+    sel = masks.choose_selectors(jax.random.PRNGKey(3), 16, 4)
+    s = np.asarray(sel)
+    assert len(set(s.tolist())) == 4 and (s < 16).all()
+
+
+# ---------------------------------------------------------------------------
+# flatten
+# ---------------------------------------------------------------------------
+
+@given(shapes=st.lists(
+    st.tuples(st.integers(1, 7), st.integers(1, 9)), min_size=1, max_size=5),
+    block=st.sampled_from([4, 16, 64]))
+@settings(max_examples=25, deadline=None)
+def test_flatten_roundtrip(shapes, block):
+    rng = np.random.default_rng(0)
+    tree = {f"p{i}": jnp.asarray(rng.normal(size=s).astype(np.float32))
+            for i, s in enumerate(shapes)}
+    spec = make_flat_spec(tree, block)
+    flat = flatten_tree(tree, spec)
+    assert flat.shape == (spec.n_blocks, block)
+    back = unflatten_tree(flat, spec)
+    for k in tree:
+        np.testing.assert_allclose(back[k], tree[k], rtol=1e-6)
+    assert spec.layer_ids.shape == (spec.n_blocks,)
+    assert spec.n_layers == len(shapes)
+
+
+def test_flatten_stacked_layer_ids():
+    # key "a" sorts first: 4 stacked sublayers of 64 elems, then a plain leaf
+    tree = {"a": jnp.zeros((4, 8, 8)), "b": jnp.zeros((5, 5))}
+    spec = make_flat_spec(tree, 16, stacked={"a": True, "b": False})
+    assert spec.n_layers == 5          # 4 sublayers + 1 plain
+    # stacked leaf occupies 4*64/16 = 16 blocks, 4 per sublayer
+    assert list(spec.layer_ids[:16]) == sum([[i] * 4 for i in range(4)], [])
+    assert (spec.layer_ids[16:] == 4).all()
+
+
+# ---------------------------------------------------------------------------
+# metrics (paper Table I arithmetic)
+# ---------------------------------------------------------------------------
+
+def test_wire_bytes_math():
+    nb, blk, n = 6400, 1024, 96
+    dense = metrics.dense_wire_bytes(nb, blk, n)
+    k = nb // 64
+    iwp = metrics.iwp_wire_bytes(nb, blk, k, n, 4)
+    ratio = metrics.compression_ratio(dense, iwp)
+    assert 30 < ratio < 64                  # index overhead < 2x
+    dgc = metrics.dgc_wire_bytes(nb, blk, k, n)
+    assert dgc > 5 * iwp                    # densification costs
+    assert metrics.ring_allreduce_bytes(100, 1) == 0.0

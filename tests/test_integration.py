@@ -1,0 +1,174 @@
+"""End-to-end integration (subprocess, 8 simulated devices): TP parity,
+full train steps with every sync strategy, convergence parity (the paper's
+accuracy claim at smoke scale), and decode on the mesh."""
+import pytest
+
+from tests.util import run_py
+
+
+@pytest.mark.slow
+def test_tp_loss_parity_all_archs():
+    out = run_py("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.configs import ARCH_IDS, get_arch
+from repro.launch.mesh import make_sim_mesh
+from repro.launch.sharding import make_dist
+from repro.models import transformer as T
+from repro.models.common import Dist
+from repro.data.synthetic import make_batch_for
+mesh = make_sim_mesh(dp=2, tp=4)
+class Shp: seq_len=16; global_batch=4
+for aid in ARCH_IDS:
+    cfg = get_arch(aid).reduced()
+    d1 = Dist()
+    ps1 = T.init_params(jax.random.PRNGKey(0), cfg, d1)
+    batch = make_batch_for(cfg, Shp, local_batch=4)
+    loss1 = T.loss_fn(cfg, d1, ps1.params, batch)[0]
+    dist = make_dist(cfg, mesh, param_dtype=jnp.float32,
+                     compute_dtype=jnp.float32)
+    ps2 = T.init_params(jax.random.PRNGKey(0), cfg, dist)
+    def body(p, b):
+        return jax.lax.pmean(T.loss_fn(cfg, dist, p, b)[0], "data")
+    sm = jax.shard_map(body, mesh=mesh,
+        in_specs=(ps2.specs, jax.tree.map(lambda _: P("data"), batch)),
+        out_specs=P(), check_vma=False)
+    with jax.set_mesh(mesh):
+        loss2 = jax.jit(sm)(ps2.params, batch)
+    # moe: capacity-pool semantics differ with shard size; audio: per-shard
+    # mean over unequal masked-token counts vs global mean (DESIGN.md)
+    tol = 5e-2 if (cfg.moe is not None or cfg.frontend == "audio") else 1e-4
+    d = abs(float(loss1) - float(loss2))
+    assert d < tol, (aid, d)
+    print("PARITY", aid, d)
+print("ALL_PARITY_OK")
+""", timeout=560)
+    assert "ALL_PARITY_OK" in out
+
+
+@pytest.mark.slow
+def test_train_strategies_and_convergence():
+    out = run_py("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_arch
+from repro.configs.base import InputShape
+from repro.launch.mesh import make_sim_mesh
+from repro.launch.train import build_train
+from repro.data.synthetic import lm_batch
+
+mesh = make_sim_mesh(dp=4, tp=2)
+shape = InputShape("smoke", 64, 8, "train")
+cfg = get_arch("qwen1.5-0.5b").reduced()
+
+def run(strategy, steps=60):
+    tb = build_train(cfg, mesh, shape, sync_strategy=strategy,
+                     param_dtype=jnp.float32, compute_dtype=jnp.float32,
+                     base_lr=0.05, warmup_steps=5, total_steps=70)
+    with jax.set_mesh(mesh):
+        state = tb.init_fn(jax.random.PRNGKey(0))
+        losses = []
+        for i in range(steps):
+            b = lm_batch(jax.random.PRNGKey(1000 + i), 8, 64, cfg.vocab_size)
+            mbn = tb.microbatches
+            b = jax.tree.map(lambda x: x.reshape(
+                (mbn, x.shape[0] // mbn) + x.shape[1:]), b)
+            state, m = tb.step_fn(state, b, jax.random.PRNGKey(i))
+            losses.append(float(m["ce_loss"]))
+    return losses
+
+base = run("dense_psum")
+ring = run("dense_ring")
+iwp = run("iwp_ring")
+dgc = run("dgc_ring")
+assert abs(base[-1] - ring[-1]) < 1e-3, "ring allreduce == psum training"
+assert base[-1] < base[0] - 0.15, ("baseline must learn", base[0], base[-1])
+assert iwp[-1] < iwp[0] - 0.08, ("IWP must learn", iwp[0], iwp[-1])
+# convergence parity at smoke scale (paper Fig5/6 analogue): within 25%
+assert iwp[-1] < base[-1] + 0.25 * abs(base[0] - base[-1]), (iwp[-1], base[-1])
+print("CONV base=%.4f ring=%.4f iwp=%.4f dgc=%.4f" %
+      (base[-1], ring[-1], iwp[-1], dgc[-1]))
+print("TRAIN_OK")
+""", timeout=560)
+    assert "TRAIN_OK" in out
+
+
+@pytest.mark.slow
+def test_decode_on_mesh_matches_forward():
+    out = run_py("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.configs import get_arch
+from repro.configs.base import InputShape
+from repro.launch.mesh import make_sim_mesh
+from repro.launch.serve import build_serve, init_caches
+from repro.models import transformer as T
+from repro.models.common import Dist
+mesh = make_sim_mesh(dp=2, tp=4)
+shape = InputShape("t", 16, 4, "decode")
+for aid in ["qwen1.5-0.5b", "rwkv6-3b", "recurrentgemma-2b",
+            "command-r-plus-104b"]:
+    cfg = get_arch(aid).reduced()
+    sb = build_serve(cfg, mesh, shape, param_dtype=jnp.float32,
+                     compute_dtype=jnp.float32, cache_dtype=jnp.float32)
+    with jax.set_mesh(mesh):
+        init = jax.jit(lambda k: T.init_params(k, cfg, sb.dist).params,
+            out_shardings=jax.tree.map(
+                lambda sp: jax.sharding.NamedSharding(mesh, sp),
+                sb.pset.specs, is_leaf=lambda x: isinstance(x, P)))
+        params = init(jax.random.PRNGKey(0))
+        caches, _ = init_caches(cfg, sb.dist, shape, mesh,
+                                cache_dtype=jnp.float32)
+        toks = jax.random.randint(jax.random.PRNGKey(7), (4, 16), 0,
+                                  cfg.vocab_size).astype(jnp.int32)
+        outs = []
+        for i in range(6):
+            nxt, caches = sb.decode_fn(params, caches, toks[:, i:i+1])
+            outs.append(np.asarray(nxt))
+    d1 = Dist()
+    ps1 = T.init_params(jax.random.PRNGKey(0), cfg, d1)
+    x, _, _ = T.forward(cfg, d1, ps1.params, {"tokens": toks[:, :6]})
+    lg = T.unembed_logits(cfg, d1, ps1.params, x)
+    ref = np.asarray(jnp.argmax(lg[:, :, :cfg.vocab_size], -1))
+    agree = np.mean([float((outs[i] == ref[:, i]).mean()) for i in range(6)])
+    assert agree == 1.0, (aid, agree)
+    print("DECODE", aid, agree)
+print("DECODE_OK")
+""", timeout=560)
+    assert "DECODE_OK" in out
+
+
+@pytest.mark.slow
+def test_fsdp_train_matches_replicated():
+    out = run_py("""
+import jax, jax.numpy as jnp, numpy as np, dataclasses
+from repro.configs import get_arch
+from repro.configs.base import InputShape
+from repro.launch.mesh import make_sim_mesh
+from repro.launch.train import build_train
+from repro.data.synthetic import lm_batch
+
+mesh = make_sim_mesh(dp=4, tp=2)
+shape = InputShape("smoke", 32, 8, "train")
+base_cfg = get_arch("llama3.2-3b").reduced()
+
+def run(fsdp, steps=6):
+    cfg = dataclasses.replace(base_cfg, fsdp=fsdp)
+    tb = build_train(cfg, mesh, shape, sync_strategy="dense_psum",
+                     param_dtype=jnp.float32, compute_dtype=jnp.float32,
+                     base_lr=0.05, warmup_steps=2)
+    with jax.set_mesh(mesh):
+        state = tb.init_fn(jax.random.PRNGKey(0))
+        for i in range(steps):
+            b = lm_batch(jax.random.PRNGKey(5 + i), 8, 32, cfg.vocab_size)
+            mbn = tb.microbatches
+            b = jax.tree.map(lambda x: x.reshape(
+                (mbn, x.shape[0] // mbn) + x.shape[1:]), b)
+            state, m = tb.step_fn(state, b, jax.random.PRNGKey(i))
+    return float(m["ce_loss"])
+
+a = run(False)
+b = run(True)
+assert abs(a - b) < 2e-3, (a, b)   # FSDP gather/RS must not change math
+print("FSDP_OK", a, b)
+""", timeout=560)
+    assert "FSDP_OK" in out

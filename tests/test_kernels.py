@@ -1,0 +1,121 @@
+"""Per-kernel validation: Pallas (interpret mode) vs the pure-jnp oracle,
+swept over shapes and dtypes (deliverable c)."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+def _blocks(nb, block, dtype):
+    g = RNG.normal(size=(nb, block)).astype(dtype)
+    w = (RNG.normal(size=(nb, block)) + 0.1).astype(dtype)
+    return g, w
+
+
+@pytest.mark.parametrize("nb", [1, 7, 8, 33, 128])
+@pytest.mark.parametrize("block", [128, 256, 1024])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_importance_scores(nb, block, dtype):
+    g, w = _blocks(nb, block, np.float32)
+    g, w = jnp.asarray(g, dtype), jnp.asarray(w, dtype)
+    got = ops.block_importance(g, w, use_pallas=True)
+    want = ref.block_importance(g, w)
+    np.testing.assert_allclose(got, want, rtol=2e-2 if dtype == jnp.bfloat16
+                               else 1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("nb,block", [(16, 128), (40, 1024), (9, 256)])
+@pytest.mark.parametrize("m", [0.0, 0.9, 1.0])
+def test_residual_update(nb, block, m):
+    g, w = _blocks(nb, block, np.float32)
+    got = ops.residual_update(g, w, m, use_pallas=True)
+    want = ref.residual_update(g, w, m)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("nb,block,k", [(16, 128, 4), (64, 1024, 16),
+                                        (33, 256, 1)])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_block_gather(nb, block, k, dtype):
+    g, _ = _blocks(nb, block, np.float32)
+    g = jnp.asarray(g, dtype)
+    idx = np.sort(RNG.choice(nb, k, replace=False)).astype(np.int32)
+    got = ops.block_gather(g, idx, use_pallas=True)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(ref.block_gather(g, idx)))
+
+
+@pytest.mark.parametrize("nb,block,k", [(16, 128, 4), (64, 1024, 16)])
+def test_block_scatter_and_zero(nb, block, k):
+    g, _ = _blocks(nb, block, np.float32)
+    idx = np.sort(RNG.choice(nb, k, replace=False)).astype(np.int32)
+    pay = RNG.normal(size=(k, block)).astype(np.float32)
+    np.testing.assert_allclose(
+        ops.block_scatter(pay, idx, nb, use_pallas=True),
+        ref.block_scatter(pay, idx, nb))
+    np.testing.assert_allclose(ops.block_zero(g, idx, use_pallas=True),
+                               ref.block_zero(g, idx))
+
+
+def test_block_scatter_duplicates_last_wins():
+    nb, block = 12, 128
+    idx = np.array([3, 3, 3, 7], np.int32)
+    pay = RNG.normal(size=(4, block)).astype(np.float32)
+    pay[0] = 0.0
+    pay[1] = 0.0   # all-but-last duplicate slots zeroed (masks contract)
+    got = ops.block_scatter(pay, idx, nb, use_pallas=True)
+    want = ref.block_scatter(pay, idx, nb)
+    np.testing.assert_allclose(got, want)
+    np.testing.assert_allclose(np.asarray(got)[3], pay[2])
+
+
+@pytest.mark.parametrize("sq,sk", [(64, 64), (200, 200), (1, 200),
+                                   (128, 256)])
+@pytest.mark.parametrize("hkv,h", [(2, 4), (4, 4), (1, 8)])
+@pytest.mark.parametrize("mode", ["causal", "window", "bidir"])
+def test_flash_attention(sq, sk, hkv, h, mode):
+    if mode == "bidir" and sq != sk:
+        pytest.skip("bidir tested square")
+    q = RNG.normal(size=(2, h, sq, 32)).astype(np.float32)
+    k = RNG.normal(size=(2, hkv, sk, 32)).astype(np.float32)
+    v = RNG.normal(size=(2, hkv, sk, 32)).astype(np.float32)
+    kw = dict(causal=mode != "bidir",
+              window=37 if mode == "window" else 0)
+    got = ops.flash_attention(q, k, v, use_pallas=True, block_q=64,
+                              block_k=64, **kw)
+    want = ref.flash_attention(q, k, v, **kw)
+    np.testing.assert_allclose(got, want, atol=5e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16])
+def test_flash_attention_bf16(dtype):
+    q = jnp.asarray(RNG.normal(size=(1, 4, 96, 64)), dtype)
+    k = jnp.asarray(RNG.normal(size=(1, 2, 96, 64)), dtype)
+    v = jnp.asarray(RNG.normal(size=(1, 2, 96, 64)), dtype)
+    got = ops.flash_attention(q, k, v, use_pallas=True, block_q=32,
+                              block_k=32)
+    want = ref.flash_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=3e-2, rtol=3e-2)
+
+
+@pytest.mark.parametrize("nb,block,m", [(16, 128, 0.9), (40, 1024, 0.0),
+                                        (9, 256, 1.0)])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_fused_ef_importance(nb, block, m, dtype):
+    g, w = _blocks(nb, block, np.float32)
+    acc = RNG.normal(size=(nb, block)).astype(np.float32)
+    acc, g, w = (jnp.asarray(acc, dtype), jnp.asarray(g, dtype),
+                 jnp.asarray(w, dtype))
+    new_acc, scores = ops.accum_and_scores(acc, g, w, m, use_pallas=True)
+    ref_acc, ref_scores = ops.accum_and_scores(acc, g, w, m,
+                                               use_pallas=False)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(new_acc, np.float32),
+                               np.asarray(ref_acc, np.float32),
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(scores, ref_scores, rtol=tol, atol=tol)

@@ -1,0 +1,20 @@
+"""Test helpers. Multi-device tests run in subprocesses so the main pytest
+process keeps the default single CPU device (per repo policy: the 512-device
+flag is dry-run-only; tests simulate small meshes per-subprocess)."""
+import os
+import pathlib
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+SRC = ROOT / "src"
+
+
+def run_py(src: str, devices: int = 8, timeout: int = 560) -> str:
+    env = os.environ.copy()
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = str(SRC)
+    r = subprocess.run([sys.executable, "-c", src], capture_output=True,
+                       text=True, env=env, timeout=timeout)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
